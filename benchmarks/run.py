@@ -1,0 +1,233 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,metric,value`` CSV rows. Run with:
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Mapping to the paper:
+  amr_cycle          Tables 4-7 / Figs 8-15: AMR cycle cost per balancer vs N
+                     (wall seconds at small N; per-rank bytes/rounds vs N)
+  balance_quality    Table 3: avg/max blocks per rank before/after balancing
+  diffusion_iters    Figs 10/12: main iterations to perfect balance vs N
+  metadata_sync      Table 1: bytes globally replicated per rank (SFC) vs
+                     diffusion, weak scaling
+  migration_volume   Figs 8/9/11/13 data-migration stage: bytes moved per rank
+  lbm_mlups          kernel throughput (MLUPS, interpret-mode lower bound +
+                     pure-jnp reference path)
+  roofline           §Roofline: renders the dry-run artifact table
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import time
+
+import numpy as np
+
+
+def _csv(name: str, metric: str, value) -> None:
+    print(f"{name},{metric},{value}")
+
+
+# -----------------------------------------------------------------------------
+
+
+def amr_cycle(quick: bool = False) -> None:
+    """One full AMR stress cycle per balancer; wall time + comm volume."""
+    from repro.core import AMRPipeline, BlockDataRegistry, Comm, DiffusionBalancer, SFCBalancer
+    from .scenario import build_scenario, stress_marks
+
+    ranks = (8, 32) if quick else (8, 32, 128)
+    balancers = {
+        "sfc-morton": lambda: SFCBalancer(order="morton"),
+        "sfc-hilbert": lambda: SFCBalancer(order="hilbert"),
+        "diff-push": lambda: DiffusionBalancer(mode="push", flow_iterations=15, max_main_iterations=30),
+        "diff-pushpull": lambda: DiffusionBalancer(mode="pushpull", flow_iterations=5, max_main_iterations=30),
+    }
+    for nranks in ranks:
+        for name, make in balancers.items():
+            forest, geom = build_scenario(nranks)
+            for b in forest.all_blocks():
+                b.data["payload"] = np.zeros(512, np.float32)  # 2 KiB stand-in
+            comm = Comm(nranks)
+            pipe = AMRPipeline(balancer=make(), registry=BlockDataRegistry.trivial("payload"))
+            t0 = time.perf_counter()
+            forest, rep = pipe.run_cycle(forest, comm, stress_marks(geom))
+            dt = time.perf_counter() - t0
+            _csv(f"amr_cycle/{name}", f"n{nranks}_wall_s", round(dt, 4))
+            _csv(f"amr_cycle/{name}", f"n{nranks}_coll_bytes_per_rank", comm.stats.collective_bytes_per_rank)
+            _csv(f"amr_cycle/{name}", f"n{nranks}_p2p_bytes_per_rank_max", comm.stats.max_sent_bytes_per_rank)
+            _csv(f"amr_cycle/{name}", f"n{nranks}_balance_iters", rep.main_iterations)
+
+
+def balance_quality(quick: bool = False) -> None:
+    """Table 3: avg/max blocks per rank, before and after load balancing."""
+    from repro.core import Comm, DiffusionBalancer
+    from repro.core.proxy import build_proxy, migrate_proxy_blocks
+    from repro.core.refine import mark_and_balance_targets
+    from .scenario import build_scenario, stress_marks
+
+    nranks = 32
+    forest, geom = build_scenario(nranks)
+    comm = Comm(nranks)
+    changed, ghost = mark_and_balance_targets(forest, comm, stress_marks(geom))
+    proxy = build_proxy(forest, comm, ghost)
+    levels = proxy.levels_in_use()
+    for lvl in levels:
+        counts = proxy.blocks_per_rank(lvl)
+        _csv("balance_quality", f"L{lvl}_before_avg", round(sum(counts) / nranks, 3))
+        _csv("balance_quality", f"L{lvl}_before_max", max(counts))
+    balancer = DiffusionBalancer(mode="pushpull", flow_iterations=5, max_main_iterations=30)
+    it = 0
+    while True:
+        assignments, again = balancer(proxy, comm, it)
+        migrate_proxy_blocks(proxy, forest, comm, assignments)
+        it += 1
+        if not again:
+            break
+    for lvl in levels:
+        counts = proxy.blocks_per_rank(lvl)
+        ceil = math.ceil(sum(counts) / nranks)
+        _csv("balance_quality", f"L{lvl}_after_avg", round(sum(counts) / nranks, 3))
+        _csv("balance_quality", f"L{lvl}_after_max", max(counts))
+        _csv("balance_quality", f"L{lvl}_perfect_max", ceil)
+
+
+def diffusion_iters(quick: bool = False) -> None:
+    """Figs 10/12: main iterations to perfect balance vs rank count."""
+    from repro.core import AMRPipeline, BlockDataRegistry, Comm, DiffusionBalancer
+    from .scenario import build_scenario, stress_marks
+
+    ranks = (8, 32) if quick else (8, 16, 32, 64, 128)
+    for mode, flows in (("push", 15), ("pushpull", 5)):
+        for nranks in ranks:
+            forest, geom = build_scenario(nranks)
+            comm = Comm(nranks)
+            bal = DiffusionBalancer(mode=mode, flow_iterations=flows, max_main_iterations=40)
+            pipe = AMRPipeline(balancer=bal, registry=BlockDataRegistry.trivial())
+            forest, rep = pipe.run_cycle(forest, comm, stress_marks(geom))
+            _csv(f"diffusion_iters/{mode}", f"n{nranks}", rep.main_iterations)
+
+
+def metadata_sync(quick: bool = False) -> None:
+    """Table 1: per-rank bytes held after the balancing synchronization."""
+    from repro.core import AMRPipeline, BlockDataRegistry, Comm, DiffusionBalancer, SFCBalancer
+    from .scenario import build_scenario, stress_marks
+
+    ranks = (8, 32) if quick else (8, 32, 128)
+    cases = {
+        "sfc_per_level_ids": lambda: SFCBalancer(per_level=True, weighted=False),
+        "sfc_per_level_weighted": lambda: SFCBalancer(per_level=True, weighted=True),
+        "sfc_flat_counts": lambda: SFCBalancer(per_level=False, weighted=False),
+        "diffusion": lambda: DiffusionBalancer(mode="pushpull", flow_iterations=5, max_main_iterations=20),
+    }
+    for nranks in ranks:
+        for name, make in cases.items():
+            forest, geom = build_scenario(nranks)
+            comm = Comm(nranks)
+            pipe = AMRPipeline(balancer=make(), registry=BlockDataRegistry.trivial())
+            pipe.run_cycle(forest, comm, stress_marks(geom))
+            _csv(f"metadata_sync/{name}", f"n{nranks}_bytes_per_rank", comm.stats.collective_bytes_per_rank)
+
+
+def migration_volume(quick: bool = False) -> None:
+    """Data-migration stage volume per balancer (Figs 8/9/11/13 breakdown)."""
+    from repro.core import AMRPipeline, BlockDataRegistry, Comm, DiffusionBalancer, SFCBalancer
+    from .scenario import build_scenario, stress_marks
+
+    nranks = 32
+    for name, make in (
+        ("sfc-morton", lambda: SFCBalancer(order="morton")),
+        ("diff-pushpull", lambda: DiffusionBalancer(mode="pushpull", flow_iterations=5, max_main_iterations=30)),
+    ):
+        forest, geom = build_scenario(nranks)
+        for b in forest.all_blocks():
+            b.data["payload"] = np.zeros(16384, np.float32)  # 64 KiB per block
+        comm = Comm(nranks)
+        pipe = AMRPipeline(balancer=make(), registry=BlockDataRegistry.trivial("payload"))
+        forest, rep = pipe.run_cycle(forest, comm, stress_marks(geom))
+        mig = rep.stages.get("migrate")
+        bal = rep.stages.get("balance")
+        _csv(f"migration_volume/{name}", "migrate_bytes_total", mig.p2p_bytes)
+        _csv(f"migration_volume/{name}", "balance_bytes_total", bal.p2p_bytes)
+        _csv(f"migration_volume/{name}", "proxy_blocks_moved", rep.proxy_blocks_moved)
+
+
+def lbm_mlups(quick: bool = False) -> None:
+    """Fused stream-collide throughput (CPU; TPU numbers come from the
+    roofline model — interpret-mode wall time is NOT the TPU projection)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.lbm_collide.ops import make_stream_collide
+    from repro.lbm.lattice import D3Q19
+
+    B, n = (2, 16) if quick else (4, 32)
+    rng = np.random.default_rng(0)
+    f = jnp.asarray(
+        np.asarray(D3Q19.w, np.float32)[None, :, None, None, None]
+        * (1 + 0.01 * rng.standard_normal((B, 19, n, n, n)).astype(np.float32))
+    )
+    mask = jnp.zeros((B, n, n, n), jnp.int32)
+    for backend in ("ref", "pallas"):
+        step = make_stream_collide(omega=1.6, backend=backend, interpret=True)
+        out = step(f, mask)
+        out.block_until_ready()
+        t0 = time.perf_counter()
+        reps = 3 if backend == "pallas" else 10
+        for _ in range(reps):
+            out = step(out, mask)
+        out.block_until_ready()
+        dt = (time.perf_counter() - t0) / reps
+        mlups = B * n**3 / dt / 1e6
+        _csv(f"lbm_mlups/{backend}", f"cells{B * n**3}", round(mlups, 3))
+
+
+def roofline(quick: bool = False) -> None:
+    """Render the §Roofline table from the dry-run artifacts."""
+    import json
+    from pathlib import Path
+
+    art_dir = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+    rows = sorted(art_dir.glob("*.json"))
+    if not rows:
+        _csv("roofline", "status", "no dry-run artifacts (run repro.launch.dryrun)")
+        return
+    for path in rows:
+        d = json.loads(path.read_text())
+        r = d["roofline"]
+        name = f"{d['arch']}/{d['shape']}/{d['mesh']}"
+        _csv(f"roofline/{name}", "dominant", r["dominant"])
+        _csv(f"roofline/{name}", "compute_s", f"{r['compute_s']:.4g}")
+        _csv(f"roofline/{name}", "memory_s", f"{r['memory_s']:.4g}")
+        _csv(f"roofline/{name}", "collective_s", f"{r['collective_s']:.4g}")
+        _csv(f"roofline/{name}", "roofline_fraction", f"{r.get('roofline_fraction', 0):.3f}")
+        _csv(f"roofline/{name}", "useful_ratio", d["flops"]["useful_ratio"])
+
+
+ALL = {
+    "amr_cycle": amr_cycle,
+    "balance_quality": balance_quality,
+    "diffusion_iters": diffusion_iters,
+    "metadata_sync": metadata_sync,
+    "migration_volume": migration_volume,
+    "lbm_mlups": lbm_mlups,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", action="append", choices=sorted(ALL), default=None)
+    args = ap.parse_args()
+    names = args.only or list(ALL)
+    print("name,metric,value")
+    for name in names:
+        t0 = time.perf_counter()
+        ALL[name](quick=args.quick)
+        _csv(name, "bench_wall_s", round(time.perf_counter() - t0, 2))
+
+
+if __name__ == "__main__":
+    main()

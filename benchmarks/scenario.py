@@ -1,0 +1,64 @@
+"""The paper's synthetic benchmark scenario (§5.1.1), scaled down.
+
+Lid-driven-cavity-style block structure: a 3-level-refined region near the
+"lid edges", then an artificial AMR trigger that coarsens the finest level
+and refines an equal number of coarser neighbors, so that the finest region
+moves inward and ~70% of cells change size — the stress pattern of Fig. 7.
+
+Weak scaling: the root grid grows with the rank count so the per-rank block
+counts match Table 3 regardless of N.
+"""
+
+from __future__ import annotations
+
+from repro.core import Comm, ForestGeometry, make_uniform_forest
+from repro.core.forest import BlockForest
+
+__all__ = ["build_scenario", "stress_marks"]
+
+
+def build_scenario(nranks: int, *, blocks_per_rank: int = 8) -> tuple[BlockForest, ForestGeometry]:
+    """Forest with ~blocks_per_rank blocks/rank across 3 levels, weak-scaled."""
+    # choose a root grid with ~nranks*blocks_per_rank/12 root blocks
+    import math
+
+    target_roots = max(1, nranks * blocks_per_rank // 16)
+    rx = max(1, int(round(target_roots ** (1 / 3))))
+    ry = max(1, int(round((target_roots / rx) ** 0.5)))
+    rz = max(1, target_roots // (rx * ry))
+    geom = ForestGeometry(root_grid=(rx, ry, rz), max_level=10)
+    forest = make_uniform_forest(geom, nranks, level=0)
+    comm = Comm(nranks)
+    from repro.core import AMRPipeline, BlockDataRegistry, SFCBalancer
+
+    pipe = AMRPipeline(balancer=SFCBalancer(), registry=BlockDataRegistry.trivial())
+
+    # refine a corner region twice -> 3 levels (like the lid-edge refinement)
+    def refine_corner(rank, blocks):
+        out = {}
+        for bid, blk in blocks.items():
+            x0, y0, z0, _, _, z1 = geom.aabb(bid)
+            full = 1 << geom.max_level
+            if z1 >= rz * full and x0 < (rx * full) // 2 and blk.level < 2:
+                out[bid] = blk.level + 1
+        return out
+
+    forest, _ = pipe.run_cycle(forest, comm, refine_corner)
+    forest, _ = pipe.run_cycle(forest, comm, refine_corner)
+    return forest, geom
+
+
+def stress_marks(geom: ForestGeometry):
+    """§5.1.1 trigger: coarsen the finest level, refine its coarser shell."""
+
+    def mark(rank, blocks):
+        finest = max((b.level for b in blocks.values()), default=0)
+        out = {}
+        for bid, blk in blocks.items():
+            if blk.level == finest and finest > 0:
+                out[bid] = blk.level - 1
+            elif blk.level == finest - 1:
+                out[bid] = blk.level + 1
+        return out
+
+    return mark

@@ -1,0 +1,52 @@
+"""End-to-end driver: 3D lid-driven cavity with dynamic AMR (paper §5.1.1).
+
+Runs the LBM (D3Q19, TRT) with the velocity-gradient refinement criterion,
+diffusion load balancing, and per-level time stepping. Prints per-epoch
+diagnostics including the AMR pipeline stage costs.
+
+    PYTHONPATH=src python examples/lbm_cavity_amr.py [--steps 12]
+"""
+
+import argparse
+
+from repro.lbm import AMRLBM, LidDrivenCavityConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--amr-interval", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = LidDrivenCavityConfig(
+        root_grid=(2, 2, 2),
+        cells_per_block=(8, 8, 8),
+        nranks=8,
+        omega=1.6,
+        u_lid=(0.08, 0.0, 0.0),
+        collision="trt",
+        max_level=2,
+        refine_upper=0.04,
+        refine_lower=0.006,
+        balancer="diffusion-pushpull",
+    )
+    sim = AMRLBM(cfg)
+    print(f"initial: {sim.forest.num_blocks()} blocks "
+          f"({sim.num_fluid_cells()} fluid cells), mass {sim.total_mass():.2f}")
+    for epoch in range(args.steps // args.amr_interval):
+        sim.advance(args.amr_interval)
+        report = sim.adapt()
+        sim.forest.check_all()
+        levels = {l: sim.forest.blocks_per_rank(l) for l in sim.forest.levels_in_use()}
+        print(
+            f"step {sim.coarse_step:3d}: blocks={sim.forest.num_blocks():4d} "
+            f"levels={sorted(levels)} vmax={sim.max_velocity():.4f} "
+            f"mass={sim.total_mass():.2f} amr={'ran' if report.executed else 'skipped'}"
+        )
+        for lvl, counts in levels.items():
+            print(f"    L{lvl}: max/rank={max(counts)} total={sum(counts)}")
+    print(f"done: {sim.amr_cycles} AMR cycles executed")
+
+
+if __name__ == "__main__":
+    main()

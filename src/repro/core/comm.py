@@ -1,0 +1,145 @@
+"""Message-passing fabric for simulated distributed ranks, with accounting.
+
+Every algorithm in :mod:`repro.core` is written against this interface: ranks
+may only read their *own* state plus messages delivered by the fabric. This
+keeps the implementation faithful to the paper's fully distributed algorithms
+while allowing thousands of simulated ranks in one process.
+
+The fabric counts, per rank and in total:
+
+* point-to-point messages and bytes,
+* collective participations and the bytes each rank must *hold* as a result
+  (the paper's Table 1 quantity: allgather makes every rank hold Θ(N) bytes,
+  allreduce only O(1)),
+* communication rounds (supersteps).
+
+These counters are the measured quantities behind EXPERIMENTS.md's
+reproduction of the paper's scalability argument (§2.4.1 vs §2.4.2).
+
+On a real machine this layer maps 1:1 onto MPI (send/recv, MPI_Allreduce,
+MPI_Allgatherv) or, on a TPU pod, onto `jax.lax` collectives — see
+DESIGN.md §3 for the mapping.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable
+
+__all__ = ["CommStats", "Comm"]
+
+# Byte-size conventions for meta data (paper §2.4: "a few bytes of data").
+BYTES_BLOCK_ID = 8          # block identifier (paper: 4-8 bytes per block)
+BYTES_RANK = 4              # a process rank
+BYTES_WEIGHT = 4            # a block weight (paper: 1-4 bytes)
+BYTES_LEVEL = 1             # a block level / target-level
+BYTES_FLOAT = 8
+BYTES_COUNT = 4
+
+
+@dataclass
+class CommStats:
+    nranks: int = 0
+    rounds: int = 0
+    exchange_rounds: int = 0  # p2p supersteps only (no collective latency)
+    p2p_messages: int = 0
+    p2p_bytes: int = 0
+    allreduce_calls: int = 0
+    allgather_calls: int = 0
+    # bytes a single rank must hold/receive as a result of collectives:
+    collective_bytes_per_rank: int = 0
+    max_inbox_bytes_per_round: int = 0
+    # per-rank p2p bytes sent (for peak/imbalance analysis)
+    sent_bytes_by_rank: dict[int, int] = field(default_factory=lambda: defaultdict(int))
+
+    def reset(self) -> None:
+        self.rounds = 0
+        self.exchange_rounds = 0
+        self.p2p_messages = 0
+        self.p2p_bytes = 0
+        self.allreduce_calls = 0
+        self.allgather_calls = 0
+        self.collective_bytes_per_rank = 0
+        self.max_inbox_bytes_per_round = 0
+        self.sent_bytes_by_rank = defaultdict(int)
+
+    @property
+    def max_sent_bytes_per_rank(self) -> int:
+        return max(self.sent_bytes_by_rank.values(), default=0)
+
+    def summary(self) -> dict[str, float]:
+        return {
+            "nranks": self.nranks,
+            "rounds": self.rounds,
+            "p2p_messages": self.p2p_messages,
+            "p2p_bytes": self.p2p_bytes,
+            "p2p_bytes_per_rank_avg": self.p2p_bytes / max(1, self.nranks),
+            "p2p_bytes_per_rank_max": self.max_sent_bytes_per_rank,
+            "allreduce_calls": self.allreduce_calls,
+            "allgather_calls": self.allgather_calls,
+            "collective_bytes_per_rank": self.collective_bytes_per_rank,
+        }
+
+
+class Comm:
+    """Superstep message fabric for ``nranks`` simulated ranks."""
+
+    def __init__(self, nranks: int):
+        self.nranks = nranks
+        self.stats = CommStats(nranks=nranks)
+        self._outbox: dict[int, list[tuple[str, Any, int]]] = defaultdict(list)
+
+    # -- point-to-point -------------------------------------------------------
+    def send(self, src: int, dst: int, tag: str, payload: Any, nbytes: int) -> None:
+        """Queue a message; delivered at the next :meth:`exchange` round."""
+        assert 0 <= dst < self.nranks, (src, dst)
+        self._outbox[dst].append((tag, payload, nbytes))
+        self.stats.p2p_messages += 1
+        self.stats.p2p_bytes += nbytes
+        self.stats.sent_bytes_by_rank[src] += nbytes
+
+    def exchange(self) -> dict[int, list[tuple[str, Any]]]:
+        """Deliver all queued messages; one communication round (superstep)."""
+        self.stats.rounds += 1
+        self.stats.exchange_rounds += 1
+        inbox: dict[int, list[tuple[str, Any]]] = defaultdict(list)
+        max_inbox = 0
+        for dst, msgs in self._outbox.items():
+            inbox[dst] = [(tag, payload) for tag, payload, _ in msgs]
+            max_inbox = max(max_inbox, sum(n for _, _, n in msgs))
+        self.stats.max_inbox_bytes_per_round = max(
+            self.stats.max_inbox_bytes_per_round, max_inbox
+        )
+        self._outbox = defaultdict(list)
+        return inbox
+
+    # -- collectives ------------------------------------------------------------
+    def allreduce(self, per_rank_values: Iterable[Any], op: Callable[[Any, Any], Any], nbytes: int = 8) -> Any:
+        """Global reduction; every rank receives the reduced value.
+
+        Cost model: O(1) result bytes per rank, log(N) latency — the paper's
+        two optional global reductions (§2.2, §2.4.2) use this.
+        """
+        self.stats.allreduce_calls += 1
+        self.stats.rounds += max(1, (self.nranks - 1).bit_length())
+        self.stats.collective_bytes_per_rank += nbytes
+        it = iter(per_rank_values)
+        acc = next(it)
+        for v in it:
+            acc = op(acc, v)
+        return acc
+
+    def allgather(self, per_rank_values: list[Any], nbytes_each: int) -> list[Any]:
+        """Global gather; every rank receives every rank's contribution.
+
+        Cost model: Θ(N)·nbytes_each held bytes per rank — this is the
+        SFC balancer's scalability bottleneck measured in §5.1.2/Table 1.
+        """
+        self.stats.allgather_calls += 1
+        self.stats.rounds += max(1, (self.nranks - 1).bit_length())
+        self.stats.collective_bytes_per_rank += nbytes_each * self.nranks
+        return list(per_rank_values)
+
+    def barrier(self) -> None:
+        self.stats.rounds += 1

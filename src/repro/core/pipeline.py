@@ -1,0 +1,131 @@
+"""The four-step AMR pipeline driver (paper Alg. 1, §2.1).
+
+    1. mark blocks for refinement/coarsening + enforce 2:1   (refine.py)
+    2. create the lightweight proxy data structure           (proxy.py)
+    3. dynamically load balance the proxy                    (balancing/)
+    4. migrate + refine/coarsen the actual simulation data   (migration.py)
+
+The pipeline can be forced to run without any marks ("block weights must be
+reevaluated and blocks must be redistributed"), supports multiple AMR cycles
+per invocation, and records per-stage communication statistics so benchmarks
+can attribute cost to stages exactly like the paper's Figures 8-13.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+from .balancing.base import Balancer
+from .comm import Comm
+from .forest import BlockForest
+from .migration import BlockDataRegistry, migrate_data
+from .proxy import ProxyWeightFn, build_proxy, migrate_proxy_blocks
+from .refine import MarkCallback, mark_and_balance_targets
+
+__all__ = ["AMRPipeline", "CycleReport"]
+
+
+@dataclass
+class StageStats:
+    seconds: float = 0.0
+    p2p_bytes: int = 0
+    p2p_messages: int = 0
+    rounds: int = 0
+    collective_bytes_per_rank: int = 0
+
+    @staticmethod
+    def delta(before: dict, after: dict, seconds: float) -> "StageStats":
+        return StageStats(
+            seconds=seconds,
+            p2p_bytes=after["p2p_bytes"] - before["p2p_bytes"],
+            p2p_messages=after["p2p_messages"] - before["p2p_messages"],
+            rounds=after["rounds"] - before["rounds"],
+            collective_bytes_per_rank=after["collective_bytes_per_rank"]
+            - before["collective_bytes_per_rank"],
+        )
+
+
+@dataclass
+class CycleReport:
+    executed: bool = False
+    levels_changed: bool = False
+    main_iterations: int = 0
+    proxy_blocks_moved: int = 0
+    stages: dict[str, StageStats] = field(default_factory=dict)
+
+    def total_seconds(self) -> float:
+        return sum(s.seconds for s in self.stages.values())
+
+
+@dataclass
+class AMRPipeline:
+    balancer: Balancer
+    registry: BlockDataRegistry
+    weight_fn: ProxyWeightFn | None = None
+
+    def run_cycle(
+        self,
+        forest: BlockForest,
+        comm: Comm,
+        mark_fn: MarkCallback | None,
+        *,
+        force_rebalance: bool = False,
+        max_cycles: int = 1,
+    ) -> tuple[BlockForest, CycleReport]:
+        """Run up to ``max_cycles`` AMR cycles (Alg. 1). Returns the new
+        actual forest (the input forest is consumed) and a report."""
+        report = CycleReport()
+        current = forest
+        for _cycle in range(max_cycles):
+            # ---- step 1: block-level refinement (+ 2:1) ---------------------
+            t0 = time.perf_counter()
+            s0 = comm.stats.summary()
+            changed, ghost = mark_and_balance_targets(current, comm, mark_fn)
+            report.stages["refine"] = StageStats.delta(
+                s0, comm.stats.summary(), time.perf_counter() - t0
+            )
+            report.levels_changed |= changed
+            if not changed and not force_rebalance:
+                # early exit: no marks and no forced weight reevaluation
+                return current, report
+            report.executed = True
+
+            # ---- step 2: proxy data structure --------------------------------
+            t0 = time.perf_counter()
+            s0 = comm.stats.summary()
+            proxy = build_proxy(current, comm, ghost, self.weight_fn)
+            report.stages["proxy"] = StageStats.delta(
+                s0, comm.stats.summary(), time.perf_counter() - t0
+            )
+
+            # ---- step 3: dynamic load balancing (iterative) -------------------
+            t0 = time.perf_counter()
+            s0 = comm.stats.summary()
+            iteration = 0
+            while True:
+                assignments, again = self.balancer(proxy, comm, iteration)
+                report.proxy_blocks_moved += migrate_proxy_blocks(
+                    proxy, current, comm, assignments
+                )
+                iteration += 1
+                if not again:
+                    break
+            report.main_iterations += iteration
+            report.stages["balance"] = StageStats.delta(
+                s0, comm.stats.summary(), time.perf_counter() - t0
+            )
+
+            # ---- step 4: data migration + refine/coarsen ----------------------
+            t0 = time.perf_counter()
+            s0 = comm.stats.summary()
+            current = migrate_data(current, proxy, comm, self.registry)
+            report.stages["migrate"] = StageStats.delta(
+                s0, comm.stats.summary(), time.perf_counter() - t0
+            )
+            # proxy is destroyed here (temporary structure, paper Fig. 6)
+            del proxy
+            force_rebalance = False
+            mark_fn = mark_fn if max_cycles > 1 else None
+        return current, report

@@ -1,0 +1,4 @@
+from .ops import fused_stream_collide
+from .ref import stream_collide_ref
+
+__all__ = ["fused_stream_collide", "stream_collide_ref"]

@@ -1,0 +1,86 @@
+"""Jitted public wrapper around the fused LBM stream+collide kernel.
+
+Dispatches between the Pallas kernel (TPU target; interpret mode on CPU) and
+the pure-jnp reference (oracle / fallback). All simulation-constant
+parameters (lattice, omega, wall velocity, collision model) are closed over
+so the jitted step takes only the block stack and the mask.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...lbm.lattice import D3Q19, Lattice
+from .lbm_collide import lbm_stream_collide_pallas
+from .ref import stream_collide_ref
+
+__all__ = ["fused_stream_collide", "make_stream_collide"]
+
+
+def make_stream_collide(
+    *,
+    omega: float,
+    lattice: Lattice = D3Q19,
+    u_wall: tuple[float, float, float] = (0.0, 0.0, 0.0),
+    collision: str = "bgk",
+    backend: str = "pallas",  # "pallas" | "ref"
+    interpret: bool = True,
+):
+    """Build a jitted ``step(f_blocks, mask_blocks) -> f_blocks`` function."""
+
+    if backend == "pallas":
+
+        @jax.jit
+        def step(f: jax.Array, mask: jax.Array) -> jax.Array:
+            return lbm_stream_collide_pallas(
+                f,
+                mask,
+                omega=omega,
+                lattice=lattice,
+                u_wall=u_wall,
+                collision=collision,
+                interpret=interpret,
+            )
+
+    elif backend == "ref":
+        ref = functools.partial(
+            stream_collide_ref,
+            omega=omega,
+            lattice=lattice,
+            u_wall=u_wall,
+            collision=collision,
+        )
+
+        @jax.jit
+        def step(f: jax.Array, mask: jax.Array) -> jax.Array:
+            return jax.vmap(ref)(f, mask)
+
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    return step
+
+
+def fused_stream_collide(
+    f: jax.Array,
+    mask: jax.Array,
+    *,
+    omega: float,
+    lattice: Lattice = D3Q19,
+    u_wall: tuple[float, float, float] = (0.0, 0.0, 0.0),
+    collision: str = "bgk",
+    backend: str = "pallas",
+    interpret: bool = True,
+) -> jax.Array:
+    """One fused stream+collide step over (B, Q, X, Y, Z) block stacks."""
+    return make_stream_collide(
+        omega=omega,
+        lattice=lattice,
+        u_wall=u_wall,
+        collision=collision,
+        backend=backend,
+        interpret=interpret,
+    )(f, mask)

@@ -1,0 +1,2 @@
+"""Launcher: production mesh, multi-pod dry-run, HLO roofline analysis,
+training/serving drivers."""

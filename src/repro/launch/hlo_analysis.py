@@ -1,0 +1,258 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+``compiled.cost_analysis()`` counts ``while``-loop bodies **once** (verified
+empirically — scan length does not change reported FLOPs), so raw numbers
+badly undercount scan-over-layers models. This module therefore parses the
+post-partitioning HLO text itself:
+
+1. split the module into named computations;
+2. record every collective op (all-gather / all-reduce / reduce-scatter /
+   all-to-all / collective-permute) with the *operand* byte size (resolved
+   through a per-computation symbol table), and every ``dot`` with its FLOPs
+   (2 x result elements x contraction size);
+3. recover each while loop's trip count from the integer ``constant(N)`` in
+   its condition computation and propagate multipliers down the (possibly
+   nested) body computations;
+4. report loop-corrected totals.
+
+Roofline terms (per step, whole mesh):
+
+    compute    = FLOPs / (chips * 197e12)          [bf16 MXU peak, v5e]
+    memory     = bytes / (chips * 819e9)           [HBM]
+    collective = collective_bytes / (chips * 4 * 45e9)  [ICI links/chip]
+
+plus, for multi-pod meshes, a separate DCN term for pod-crossing collectives
+(identified by replica groups that span pods).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = [
+    "HW",
+    "analyze_hlo",
+    "roofline_terms",
+    "HloStats",
+]
+
+
+class HW:
+    """TPU v5e-class hardware constants (per chip)."""
+
+    PEAK_FLOPS_BF16 = 197e12
+    HBM_BW = 819e9
+    ICI_LINK_BW = 50e9  # ~50 GB/s per link
+    ICI_LINKS = 4  # 2D torus: 4 links/chip
+    DCN_BW = 25e9  # inter-pod, per host aggregate (approx)
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)(?:-start)?\("
+)
+_OP_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{")
+_WHILE_RE = re.compile(r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_DOT_RE = re.compile(r"\bdot\(")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of all shapes in a type string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> tuple[list[int], str] | None:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dtype, dims = m.groups()
+    return ([int(d) for d in dims.split(",")] if dims else [], dtype)
+
+
+@dataclass
+class CompStats:
+    collective_bytes: dict[str, float] = field(default_factory=dict)
+    collective_count: int = 0
+    dot_flops: float = 0.0
+    whiles: list[tuple[str, str]] = field(default_factory=list)  # (cond, body)
+
+
+@dataclass
+class HloStats:
+    computations: dict[str, CompStats]
+    trip_counts: dict[str, int]  # body computation -> trip count
+    entry: str
+
+    # loop-corrected totals
+    collective_bytes: dict[str, float] = field(default_factory=dict)
+    collective_bytes_total: float = 0.0
+    dot_flops_total: float = 0.0
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur: str | None = None
+    entry: str | None = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    comps["__entry__"] = [cur]  # marker
+                continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps.setdefault(cur, []).append(line)
+    return comps
+
+
+def analyze_hlo(text: str) -> HloStats:
+    comps_lines = _split_computations(text)
+    entry = comps_lines.pop("__entry__", [None])[0]
+    comps: dict[str, CompStats] = {}
+    cond_trip: dict[str, int] = {}
+
+    for name, lines in comps_lines.items():
+        st = CompStats()
+        symbols: dict[str, str] = {}
+        for line in lines:
+            m = _OP_DEF_RE.match(line)
+            if not m:
+                continue
+            op_name, rhs = m.groups()
+            symbols[op_name] = rhs
+        for line in lines:
+            m = _OP_DEF_RE.match(line)
+            if not m:
+                continue
+            op_name, rhs = m.groups()
+            cm = _COLL_RE.search(rhs)
+            if cm and "-done(" not in rhs:
+                kind = cm.group(1)
+                # operand bytes via symbol lookup; fall back to result bytes
+                args = re.findall(r"%([\w\.\-]+)", rhs.split("(", 1)[1])
+                nbytes = 0
+                for a in args:
+                    if a in symbols:
+                        nbytes += _shape_bytes(symbols[a].split(" ", 1)[0] + " " + symbols[a])
+                        break  # first operand only (rest are attrs/reducers)
+                if nbytes == 0:
+                    nbytes = _shape_bytes(rhs.split("=", 1)[0] if "=" in rhs else rhs)
+                if nbytes == 0:
+                    nbytes = _shape_bytes(rhs)
+                st.collective_bytes[kind] = st.collective_bytes.get(kind, 0.0) + nbytes
+                st.collective_count += 1
+            if _DOT_RE.search(rhs):
+                out = _shape_dims(rhs)
+                lhs_ref = re.search(r"dot\(%?([\w\.\-]+)", rhs)
+                contract = _CONTRACT_RE.search(rhs)
+                if out and lhs_ref and contract:
+                    out_elems = 1
+                    for d in out[0]:
+                        out_elems *= d
+                    k = 1
+                    lhs_rhs = symbols.get(lhs_ref.group(1))
+                    if lhs_rhs:
+                        lhs_shape = _shape_dims(lhs_rhs)
+                        if lhs_shape and contract.group(1):
+                            for ci in contract.group(1).split(","):
+                                idx = int(ci)
+                                if idx < len(lhs_shape[0]):
+                                    k *= lhs_shape[0][idx]
+                    st.dot_flops += 2.0 * out_elems * k
+            wm = _WHILE_RE.search(rhs)
+            if wm:
+                st.whiles.append((wm.group(1), wm.group(2)))
+        comps[name] = st
+        consts = [int(c) for c in _CONST_RE.findall("\n".join(lines))]
+        if consts:
+            cond_trip[name] = max(consts)
+
+    # propagate multipliers down the while-nesting tree
+    mult: dict[str, float] = {name: 0.0 for name in comps}
+    if entry and entry in mult:
+        mult[entry] = 1.0
+    else:  # fall back: computation with no parent while
+        bodies = {b for c in comps.values() for _, b in c.whiles}
+        for name in comps:
+            if name not in bodies:
+                mult[name] = max(mult.get(name, 0.0), 1.0)
+    trip_counts: dict[str, int] = {}
+    changed = True
+    iters = 0
+    while changed and iters < 50:
+        changed = False
+        iters += 1
+        for name, st in comps.items():
+            if mult.get(name, 0.0) <= 0:
+                continue
+            for cond, body in st.whiles:
+                trips = cond_trip.get(cond, 1)
+                new_m = mult[name] * trips
+                if new_m > mult.get(body, 0.0):
+                    mult[body] = new_m
+                    trip_counts[body] = trips
+                    changed = True
+
+    stats = HloStats(computations=comps, trip_counts=trip_counts, entry=entry or "")
+    for name, st in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        for kind, b in st.collective_bytes.items():
+            stats.collective_bytes[kind] = stats.collective_bytes.get(kind, 0.0) + m * b
+        stats.dot_flops_total += m * st.dot_flops
+    stats.collective_bytes_total = sum(stats.collective_bytes.values())
+    return stats
+
+
+def roofline_terms(
+    *,
+    flops_per_device: float,
+    hbm_bytes_per_device: float,
+    collective_bytes_per_device: float,
+    dcn_bytes_per_device: float = 0.0,
+    n_pods: int = 1,
+) -> dict:
+    """All inputs are PER-DEVICE quantities — the partitioned HLO that
+    ``compiled.as_text()`` shows *is* the per-device program, and SPMD means
+    per-device time == step time."""
+    compute_s = flops_per_device / HW.PEAK_FLOPS_BF16
+    memory_s = hbm_bytes_per_device / HW.HBM_BW
+    coll_s = collective_bytes_per_device / (HW.ICI_LINKS * HW.ICI_LINK_BW)
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+    }
+    if n_pods > 1 and dcn_bytes_per_device:
+        terms["dcn_s"] = dcn_bytes_per_device / HW.DCN_BW
+    dominant = max(terms, key=lambda k: terms[k])
+    terms["dominant"] = dominant
+    terms["bound_s"] = terms[dominant]
+    # roofline fraction: useful compute time over the bound
+    terms["roofline_fraction"] = compute_s / max(terms["bound_s"], 1e-30)
+    return terms

@@ -1,0 +1,39 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no allocation)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..configs.shapes import ShapeConfig
+from ..models.zoo import init_cache
+
+__all__ = ["input_specs", "cache_specs", "param_shapes"]
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, *, act_dtype=jnp.bfloat16) -> dict:
+    """Batch stand-ins for train/prefill (token sequences) or decode (1 token)."""
+    B = shape.global_batch
+    S = 1 if shape.kind == "decode" else shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch: dict = {"tokens": sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        batch["labels"] = sds((B, S), jnp.int32)
+    if cfg.m_rope:
+        batch["positions"] = sds((B, 3, S), jnp.int32)
+        batch["frontend_embeds"] = sds((B, S, cfg.d_model), act_dtype)
+    if cfg.is_encoder_decoder:
+        batch["enc_embeds"] = sds((B, cfg.encoder_len, cfg.d_model), act_dtype)
+    return batch
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig, *, dtype=jnp.bfloat16):
+    """Abstract KV-cache/recurrent-state tree for decode shapes."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len, dtype)
+    )
+
+
+def param_shapes(cfg: ArchConfig, model, *, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0), dtype))

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state; the dry-run entry point forces 512 host devices *before* calling it.
+
+Topology: 16x16 = 256 chips per pod (TPU v5e pod slice); the multi-pod mesh
+prepends a "pod" axis (2 pods = 512 chips). The ("data","model") axes map to
+the ICI torus within a pod; the "pod" axis crosses DCN — the sharding specs
+therefore keep per-layer collectives intra-pod and only allow whole-gradient
+all-reduces on the pod axis (see repro.sharding.specs).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_axes", "mesh_devices"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def mesh_devices(mesh) -> int:
+    return int(mesh.devices.size)

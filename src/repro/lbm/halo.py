@@ -1,0 +1,116 @@
+"""Ghost-layer exchange between blocks (data plane).
+
+For every block/neighbor pair the region to fill is the intersection of the
+block's ghost-extended box with the neighbor's box, computed exactly in
+integer fine units (the octree geometry guarantees all box corners are
+multiples of the coarser cell size when the per-block cell count is even).
+
+Level transitions use the volumetric scheme of [54]/[16] (paper §3.3):
+
+* fine -> coarse ghost ("coalescence"): average 2x2x2 fine cells;
+* coarse -> fine ghost ("explosion"): replicate the covering coarse cell.
+
+On a distributed machine this is the standard nonuniform-LBM communication
+of [57]; in this host-plane implementation neighbor data is read directly —
+the AMR *algorithms* themselves never do this, only the stepping data path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.blockid import ForestGeometry
+from ..core.forest import Block, BlockForest
+from .grid import LBMBlockSpec
+
+__all__ = ["fill_ghost_layers", "ghost_regions"]
+
+
+def _boxes(geom: ForestGeometry, bid: int) -> tuple[np.ndarray, np.ndarray]:
+    box = geom.aabb(bid)
+    return np.asarray(box[:3], dtype=np.int64), np.asarray(box[3:], dtype=np.int64)
+
+
+def ghost_regions(
+    geom: ForestGeometry,
+    spec: LBMBlockSpec,
+    blk: Block,
+    nbid: int,
+    nlevel: int,
+):
+    """Compute (target slices, source spec) for filling blk's ghosts from
+    neighbor ``nbid``. Returns None if the ghost-extended boxes do not
+    overlap (cannot happen for true neighbors)."""
+    g = spec.ghost
+    ncells = np.asarray(spec.cells, dtype=np.int64)
+    b0, b1 = _boxes(geom, blk.bid)
+    n0, n1 = _boxes(geom, nbid)
+    cb = (b1 - b0) // ncells  # own cell size per axis (fine units)
+    cn = (n1 - n0) // ncells  # neighbor cell size
+    lo = np.maximum(b0 - g * cb, n0)
+    hi = np.minimum(b1 + g * cb, n1)
+    if np.any(hi <= lo):
+        return None
+    assert np.all((lo - b0) % cb == 0) and np.all((hi - lo) % cb == 0), (
+        "cell alignment violated — use even cells-per-block and a max_level "
+        "at least levels+log2(cells)"
+    )
+    t_lo = (lo - b0) // cb + g  # target array start (ghosted indices)
+    w = (hi - lo) // cb  # target width in own cells
+    target = tuple(slice(int(t_lo[d]), int(t_lo[d] + w[d])) for d in range(3))
+
+    if nlevel == blk.level:
+        s_lo = (lo - n0) // cn + g
+        source = ("same", tuple(slice(int(s_lo[d]), int(s_lo[d] + w[d])) for d in range(3)))
+    elif nlevel == blk.level + 1:  # neighbor finer: coalesce 2x2x2
+        s_lo = (lo - n0) // cn + g
+        source = (
+            "fine",
+            tuple(slice(int(s_lo[d]), int(s_lo[d] + 2 * w[d])) for d in range(3)),
+        )
+    else:  # neighbor coarser: explode (replicate covering coarse cell)
+        idx = tuple(
+            ((lo[d] + np.arange(int(w[d])) * cb[d] - n0[d]) // cn[d] + g).astype(np.int64)
+            for d in range(3)
+        )
+        source = ("coarse", idx)
+    return target, source
+
+
+def _extract(arr: np.ndarray, kind: str, src) -> np.ndarray:
+    """Extract + resample the source region (arr may have a leading Q axis)."""
+    if kind == "same":
+        return arr[..., src[0], src[1], src[2]]
+    if kind == "fine":
+        a = arr[..., src[0], src[1], src[2]]
+        s = a.shape
+        a = a.reshape(*s[:-3], s[-3] // 2, 2, s[-2] // 2, 2, s[-1] // 2, 2)
+        return a.mean(axis=(-5, -3, -1)).astype(arr.dtype)
+    # coarse: fancy-index with per-axis replication maps
+    ix, iy, iz = src
+    return arr[..., ix[:, None, None], iy[None, :, None], iz[None, None, :]]
+
+
+def fill_ghost_layers(
+    forest: BlockForest,
+    spec: LBMBlockSpec,
+    *,
+    fields: tuple[str, ...] = ("pdf",),
+    levels: set[int] | None = None,
+) -> None:
+    """Refresh ghost layers of all blocks (optionally only given levels)."""
+    geom = forest.geom
+    by_id: dict[int, Block] = {b.bid: b for b in forest.all_blocks()}
+    for blk in by_id.values():
+        if levels is not None and blk.level not in levels:
+            continue
+        for nbid in blk.neighbors:
+            nb = by_id[nbid]
+            reg = ghost_regions(geom, spec, blk, nbid, nb.level)
+            if reg is None:
+                continue
+            target, (kind, src) = reg
+            for name in fields:
+                blk.data[name][..., target[0], target[1], target[2]] = _extract(
+                    nb.data[name], kind, src
+                )

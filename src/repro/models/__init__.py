@@ -1,0 +1,5 @@
+"""Model zoo for the assigned architectures (JAX, scan-based layer stacks)."""
+
+from .zoo import build_model, Model
+
+__all__ = ["build_model", "Model"]

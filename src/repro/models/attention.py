@@ -1,0 +1,181 @@
+"""Attention: chunked (flash-style) training/prefill path, KV-cache decode,
+sliding windows, GQA, and a distributed flash-decode for sequence-sharded
+caches (long-context, batch=1).
+
+The chunked path never materializes the full (S x S) score matrix: it scans
+KV chunks with an online-softmax accumulator and maps over Q chunks, so peak
+memory is O(S * chunk) — required for the 32k prefill cells to fit HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["chunked_attention", "decode_attention", "sharded_decode_attention"]
+
+_NEG = -1e30
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, T, Hkv, d) -> (B, T, Hkv*groups, d) for GQA."""
+    if groups == 1:
+        return k
+    b, t, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, t, h, groups, d)).reshape(
+        b, t, h * groups, d
+    )
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, S, H, d)
+    k: jax.Array,  # (B, T, Hkv, d)
+    v: jax.Array,  # (B, T, Hkv, d)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style attention with online softmax over KV chunks."""
+    B, S, H, d = q.shape
+    _, T, Hkv, _ = k.shape
+    groups = H // Hkv
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    scale = 1.0 / np.sqrt(d)
+
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    # pad to multiples
+    S_pad = -S % q_chunk
+    T_pad = -T % kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, S_pad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, T_pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, T_pad), (0, 0), (0, 0)))
+    nq, nkv = (S + S_pad) // q_chunk, (T + T_pad) // kv_chunk
+
+    q_pos_base = jnp.arange(q_chunk) + q_offset
+    kv_pos_base = jnp.arange(kv_chunk)
+
+    qp = qp.reshape(B, nq, q_chunk, H, d).transpose(1, 0, 3, 2, 4)  # (nq,B,H,qc,d)
+    kp = kp.reshape(B, nkv, kv_chunk, H, d).transpose(1, 0, 3, 2, 4)
+    vp = vp.reshape(B, nkv, kv_chunk, H, d).transpose(1, 0, 3, 2, 4)
+
+    def one_q_chunk(qi: jax.Array, q_blk: jax.Array) -> jax.Array:
+        q_pos = q_pos_base + qi * q_chunk
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            kj, k_blk, v_blk = inputs
+            kv_pos = kv_pos_base + kj * kv_chunk
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_blk, k_blk) * scale
+            mask = kv_pos[None, :] < T  # drop padded kv
+            if causal:
+                mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+            if window is not None:
+                mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+            s = jnp.where(mask[None, None], s, _NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, v_blk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_chunk), _NEG, dtype=jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), dtype=jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, d), dtype=jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step,
+            (m0, l0, a0),
+            (jnp.arange(nkv), kp.astype(jnp.float32), vp.astype(jnp.float32)),
+        )
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(
+        lambda args: one_q_chunk(*args), (jnp.arange(nq), qp.astype(jnp.float32))
+    )  # (nq, B, H, qc, d)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, S + S_pad, H, d)[:, :S]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, d)
+    k_cache: jax.Array,  # (B, T, Hkv, d)
+    v_cache: jax.Array,
+    *,
+    window: int | None = None,
+    fill: jax.Array | int | None = None,
+    slot: jax.Array | int | None = None,
+) -> jax.Array:
+    """Single-token decode against a ring-buffer KV cache.
+
+    ``slot`` is the index the newest entry was just written to; entry ages
+    are ``(slot - idx) mod T``. A roll-by-one layout (newest = last) is the
+    ``slot = T-1`` special case. The ring layout matters for distributed
+    caches: writing one slot touches a single shard of a sequence-sharded
+    cache, whereas rolling reshuffles every shard boundary (§Perf pair 2).
+    ``fill`` masks warm-up slots (age >= fill); ``window`` masks beyond the
+    sliding window."""
+    B, _, H, d = q.shape
+    _, T, Hkv, _ = k_cache.shape
+    groups = H // Hkv
+    scale = 1.0 / np.sqrt(d)
+    # grouped-query contraction WITHOUT materializing the repeated (or f32)
+    # cache: q is reshaped to (B, Hkv, G, d) and contracted against the
+    # stored cache directly, accumulating in f32 (preferred_element_type) —
+    # the cache is read once in its storage dtype.
+    qg = q.reshape(B, Hkv, groups, d)
+    s = jnp.einsum(
+        "bhgd,bthd->bhgt", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale  # (B, Hkv, G, T)
+    idx = jnp.arange(T)
+    age = (slot - idx) % T if slot is not None else T - 1 - idx
+    if window is not None:
+        s = jnp.where(age[None, None, None, :] < window, s, _NEG)
+    if fill is not None:
+        s = jnp.where(age[None, None, None, :] < fill, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgt,bthd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, d).astype(q.dtype)
+
+
+def sharded_decode_attention(
+    q: jax.Array,  # (B, 1, H, d) — replicated over the shard axis
+    k_cache: jax.Array,  # (B, T, Hkv, d) — T sharded over ``axis_name``
+    v_cache: jax.Array,
+    *,
+    axis_name: str,
+) -> jax.Array:
+    """Distributed flash-decode: every shard attends to its local KV slice;
+    the partial (max, sum, weighted-value) statistics are combined across the
+    shard axis with small collectives. Used for ``long_500k`` (batch=1) where
+    the 0.5M-entry KV cache is sharded over the 'data' axis.
+
+    Must be called inside shard_map (or with `axis_name` bound)."""
+    B, _, H, d = q.shape
+    _, T_local, Hkv, _ = k_cache.shape
+    groups = H // Hkv
+    scale = 1.0 / np.sqrt(d)
+    qg = q.reshape(B, H, d).astype(jnp.float32)
+    kg = _repeat_kv(k_cache, groups).astype(jnp.float32)
+    vg = _repeat_kv(v_cache, groups).astype(jnp.float32)
+    s = jnp.einsum("bhd,bthd->bht", qg, kg) * scale  # (B, H, T_local)
+    m_local = s.max(axis=-1)
+    m_global = jax.lax.pmax(m_local, axis_name)
+    p = jnp.exp(s - m_global[..., None])
+    l_local = p.sum(axis=-1)
+    o_local = jnp.einsum("bht,bthd->bhd", p, vg)
+    l_global = jax.lax.psum(l_local, axis_name)
+    o_global = jax.lax.psum(o_local, axis_name)
+    out = o_global / jnp.maximum(l_global, 1e-30)[..., None]
+    return out[:, None].astype(q.dtype)

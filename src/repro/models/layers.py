@@ -1,0 +1,113 @@
+"""Shared layer primitives: norms, RoPE / M-RoPE, MLPs, embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "norm",
+    "rope_freqs",
+    "apply_rope",
+    "mrope_freqs",
+    "mlp",
+    "init_linear",
+]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array | None, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return y * scale.astype(x.dtype) if scale is not None else y
+
+
+def layer_norm(
+    x: jax.Array,
+    scale: jax.Array | None,
+    bias: jax.Array | None,
+    eps: float = 1e-5,
+) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = ((xf - mean) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    if scale is not None:
+        y = y * scale.astype(x.dtype)
+    if bias is not None:
+        y = y + bias.astype(x.dtype)
+    return y
+
+
+def norm(x: jax.Array, params: dict | None, kind: str) -> jax.Array:
+    """Dispatch on norm kind; ``params`` may be None (non-parametric, olmo)."""
+    if kind == "rmsnorm":
+        return rms_norm(x, None if params is None else params.get("scale"))
+    return layer_norm(
+        x,
+        None if params is None else params.get("scale"),
+        None if params is None else params.get("bias"),
+    )
+
+
+# -- rotary embeddings --------------------------------------------------------
+
+
+def rope_freqs(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables, shape positions.shape + (head_dim//2,)."""
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+    ang = positions[..., None].astype(jnp.float32) * inv[None]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_freqs(
+    positions: jax.Array,  # (B, 3, S): temporal / height / width position ids
+    head_dim: int,
+    theta: float,
+    sections: tuple[int, int, int],
+) -> tuple[jax.Array, jax.Array]:
+    """M-RoPE (qwen2-vl): the head_dim/2 frequency slots are split into
+    (t, h, w) sections, each driven by its own position stream."""
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+    ang_all = positions[..., None].astype(jnp.float32) * inv[None]  # (B,3,S,hd/2)
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang_all[:, i, :, start : start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)  # (B, S, hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate-half RoPE. x: (B, S, H, hd); cos/sin: (B, S, hd//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)  # (B, S, 1, hd/2)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# -- MLP ------------------------------------------------------------------------
+
+
+def mlp(x: jax.Array, p: dict, activation: str) -> jax.Array:
+    if activation == "swiglu":
+        gate = jax.nn.silu(x @ p["w_gate"])
+        up = x @ p["w_up"]
+        return (gate * up) @ p["w_down"]
+    if activation == "gelu":
+        h = jax.nn.gelu(x @ p["w_up"] + p.get("b_up", 0.0))
+        return h @ p["w_down"] + p.get("b_down", 0.0)
+    if activation == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["w_up"]))
+        return h @ p["w_down"]
+    raise ValueError(activation)
+
+
+def init_linear(key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+    fan_in = shape[0] if len(shape) == 2 else shape[-2]
+    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)

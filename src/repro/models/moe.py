@@ -1,0 +1,104 @@
+"""Mixture-of-Experts layer with capacity-based top-k routing.
+
+Dispatch is performed *within token groups* that map 1:1 onto the data-mesh
+shards (the group count is the data-parallel degree): the position-in-expert
+cumsum then never crosses a shard boundary, so the partitioner keeps routing
+local and only the expert einsums communicate. Expert weights are sharded on
+the model axis — over the expert dimension when it divides the axis (true
+expert parallelism, granite-moe 32e/16) and over d_ff otherwise (tensor
+parallelism inside each expert, mixtral 8e/16).
+
+This layer is also the integration point for the paper's technique on MoE
+architectures: :class:`repro.train.moe_balance.ExpertDiffusionBalancer` treats
+experts as blocks with router-load weights and rebalances the expert->device
+placement with the diffusion scheme between steps (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["moe_layer", "moe_capacity"]
+
+
+def moe_capacity(tokens_per_group: int, n_experts: int, top_k: int, capacity_factor: float) -> int:
+    cap = int(tokens_per_group * top_k * capacity_factor / n_experts)
+    return max(4, min(tokens_per_group, cap))
+
+
+def moe_layer(
+    x: jax.Array,  # (B, S, D)
+    p: dict,
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float,
+    n_token_groups: int = 1,
+    expert_parallel: bool = False,
+    wsc=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux load-balancing loss scalar)."""
+    B, S, D = x.shape
+    T = B * S
+    G = n_token_groups if T % max(1, n_token_groups) == 0 else 1
+    Tg = T // G
+    E, K = n_experts, top_k
+    C = moe_capacity(Tg, E, K, capacity_factor)
+    wsc = wsc or (lambda a, dims: a)
+    # NOTE (§Perf pair 1, it.2): constraining the *activation* expert dim to
+    # the model axis ("true EP") forces a (G,E,C,D) reshard per einsum that
+    # GSPMD implements as replicate+all-reduce (~1.9 GB/layer-exec). Keeping
+    # activations group-local and letting the (small) expert weights be
+    # gathered on demand is strictly cheaper for these expert sizes; the
+    # weights remain EP/FSDP-sharded in storage.
+    e_ax = "."
+
+    xf = wsc(x.reshape(G, Tg, D), "b..")
+    logits = jnp.einsum("gtd,de->gte", xf, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, Tg, E)
+    gate, expert_idx = jax.lax.top_k(probs, K)  # (G, Tg, K)
+    gate = gate / jnp.maximum(gate.sum(axis=-1, keepdims=True), 1e-9)
+
+    # position-in-expert via a cumsum over the (group-local) token axis
+    flat_e = expert_idx.reshape(G, Tg * K)  # token-major, K minor
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (G, Tg*K, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1  # (G, Tg*K, E)
+    pos_in_e = jnp.take_along_axis(pos, flat_e[..., None], axis=-1)[..., 0]  # (G, Tg*K)
+    keep = (pos_in_e < C).astype(x.dtype)
+
+    # scatter-dispatch tokens into (G, E, C, D). The group dim MUST be a
+    # scatter *batch* dim (vmap) — with explicit iota indices GSPMD treats
+    # it as a general scatter, replicates the (G,E,C,D) operand and
+    # all-reduces the partial scatters: 5 TB/device/step on granite-moe
+    # train_4k (§Perf pair 1, it.1).
+    x_rep = jnp.repeat(xf, K, axis=1)  # (G, Tg*K, D)
+    pos_clip = jnp.minimum(pos_in_e, C - 1)
+
+    def scatter_group(e_g, p_g, x_g):
+        return jnp.zeros((E, C, D), dtype=x.dtype).at[e_g, p_g].add(x_g)
+
+    disp = jax.vmap(scatter_group)(flat_e, pos_clip, x_rep * keep[..., None])
+    disp = wsc(disp, f"b{e_ax}..")  # token groups on data; experts on model (EP)
+
+    # expert FFN (SwiGLU), expert dim leading for EP/TP sharding
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", disp, p["w_gate"])) * jnp.einsum(
+        "gecd,edf->gecf", disp, p["w_up"]
+    )
+    h = wsc(h, f"b{e_ax}.." if expert_parallel else "b..m")
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    out_e = wsc(out_e, f"b{e_ax}..")
+
+    # combine: gather back and weight by the (renormalized) gates (batched
+    # gather over the group dim, same partitioning argument as the scatter)
+    back = jax.vmap(lambda o_g, e_g, p_g: o_g[e_g, p_g])(out_e, flat_e, pos_clip)
+    back = back * (keep * gate.reshape(G, Tg * K).astype(x.dtype))[..., None]
+    y = back.reshape(G, Tg, K, D).sum(axis=2).reshape(B, S, D)
+
+    # auxiliary load-balancing loss (Switch): E * sum_e f_e * p_e
+    frac = jnp.mean(
+        jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1)
+    )
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_prob)
+    return y, aux

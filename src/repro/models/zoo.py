@@ -1,0 +1,799 @@
+"""Model zoo: parameter init + train/prefill/decode computations per family.
+
+All layer stacks are ``lax.scan`` over parameters stacked on a leading layer
+axis (bounded HLO size and compile time even for the 80-layer/72B dry-run),
+with optional per-layer remat. The same layer bodies serve train, prefill,
+and decode; decode carries KV caches / recurrent states through the scan.
+
+Family dispatch:
+  dense / vlm        GQA attention (+ M-RoPE for qwen2-vl) + (Sw)GLU MLP
+  moe                GQA attention + capacity-routed expert MLP
+  hybrid (zamba2)    Mamba2 backbone + one *shared* attention block applied
+                     every ``hybrid_attn_every`` layers (own KV cache per
+                     application site)
+  ssm (rwkv6)        time-mix (WKV, data-dependent decay) + channel-mix
+  audio (whisper)    encoder-decoder; conv frontend stubbed by precomputed
+                     frame embeddings from input_specs
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, get_config
+from .attention import chunked_attention, decode_attention
+from .layers import apply_rope, mlp, mrope_freqs, norm, rope_freqs
+from .mamba2 import mamba2_decode_step, mamba2_forward, mamba2_init_cache
+from .moe import moe_layer
+from .rwkv6 import (
+    rwkv6_channel_mix,
+    rwkv6_channel_mix_step,
+    rwkv6_init_cache,
+    rwkv6_time_mix,
+    rwkv6_time_mix_step,
+)
+
+__all__ = ["Model", "build_model"]
+
+
+# =============================================================================
+# parameter initialization
+# =============================================================================
+
+
+def _lin(key, fan_in, shape, dtype):
+    return (jax.random.normal(key, shape) * (fan_in**-0.5)).astype(dtype)
+
+
+def _norm_params(cfg: ArchConfig, D: int) -> dict | None:
+    if cfg.nonparametric_ln:
+        return None
+    p = {"scale": jnp.ones((D,))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((D,))
+    return p
+
+
+def _attn_params(cfg: ArchConfig, key, dtype) -> dict:
+    D, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _lin(ks[0], D, (D, H * hd), dtype),
+        "wk": _lin(ks[1], D, (D, Hkv * hd), dtype),
+        "wv": _lin(ks[2], D, (D, Hkv * hd), dtype),
+        "wo": _lin(ks[3], H * hd, (H * hd, D), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((Hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((Hkv * hd,), dtype)
+    return p
+
+
+def _mlp_params(cfg: ArchConfig, key, dtype, d_ff: int | None = None) -> dict:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.activation == "swiglu":
+        return {
+            "w_gate": _lin(ks[0], D, (D, F), dtype),
+            "w_up": _lin(ks[1], D, (D, F), dtype),
+            "w_down": _lin(ks[2], F, (F, D), dtype),
+        }
+    return {
+        "w_up": _lin(ks[0], D, (D, F), dtype),
+        "w_down": _lin(ks[1], F, (F, D), dtype),
+    }
+
+
+def _moe_params(cfg: ArchConfig, key, dtype) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _lin(ks[0], D, (D, E), jnp.float32),
+        "w_gate": _lin(ks[1], D, (E, D, F), dtype),
+        "w_up": _lin(ks[2], D, (E, D, F), dtype),
+        "w_down": _lin(ks[3], F, (E, F, D), dtype),
+    }
+
+
+def _mamba_params(cfg: ArchConfig, key, dtype) -> dict:
+    D = cfg.d_model
+    d_inner = cfg.ssm_expand * D
+    N, P, K = cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_conv
+    H = d_inner // P
+    conv_dim = d_inner + 2 * N
+    ks = jax.random.split(key, 3)
+    return {
+        "in_proj": _lin(ks[0], D, (D, 2 * d_inner + 2 * N + H), dtype),
+        "conv_w": _lin(ks[1], K, (K, conv_dim), dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": _lin(ks[2], d_inner, (d_inner, D), dtype),
+    }
+
+
+def _rwkv_params(cfg: ArchConfig, key, dtype) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    H, hd = D // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    lora = 64
+    ks = jax.random.split(key, 10)
+    p = {
+        "w_r": _lin(ks[0], D, (D, D), dtype),
+        "w_k": _lin(ks[1], D, (D, D), dtype),
+        "w_v": _lin(ks[2], D, (D, D), dtype),
+        "w_g": _lin(ks[3], D, (D, D), dtype),
+        "w_o": _lin(ks[4], D, (D, D), dtype),
+        "w_lora_a": _lin(ks[5], D, (D, lora), dtype),
+        "w_lora_b": _lin(ks[6], lora, (lora, D), dtype) * 0.1,
+        "w0": jnp.full((D,), -0.6, jnp.float32),
+        "u": jnp.zeros((H, hd), jnp.float32),
+        "ln_x_scale": jnp.ones((D,), jnp.float32),
+        "ln_x_bias": jnp.zeros((D,), jnp.float32),
+        "w_ck": _lin(ks[7], D, (D, F), dtype),
+        "w_cv": _lin(ks[8], F, (F, D), dtype),
+        "w_cr": _lin(ks[9], D, (D, D), dtype),
+    }
+    for name in ("r", "k", "v", "g", "w"):
+        p[f"mu_{name}"] = jnp.full((D,), 0.5, jnp.float32)
+    p["mu_ck"] = jnp.full((D,), 0.5, jnp.float32)
+    p["mu_cr"] = jnp.full((D,), 0.5, jnp.float32)
+    return p
+
+
+def _layer_params(cfg: ArchConfig, key, dtype) -> dict:
+    D = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    if cfg.family == "ssm":
+        p = {"tm": _rwkv_params(cfg, k1, dtype)}
+    elif cfg.family == "hybrid":
+        p = {"mamba": _mamba_params(cfg, k1, dtype)}
+    elif cfg.family == "moe":
+        p = {"attn": _attn_params(cfg, k1, dtype), "moe": _moe_params(cfg, k2, dtype)}
+    else:
+        p = {"attn": _attn_params(cfg, k1, dtype), "mlp": _mlp_params(cfg, k2, dtype)}
+    ln1 = _norm_params(cfg, D)
+    ln2 = _norm_params(cfg, D)
+    if ln1 is not None:
+        p["ln1"], p["ln2"] = ln1, ln2
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32) -> dict:
+    D, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    keys = jax.random.split(key, L + 8)
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[_layer_params(cfg, keys[i], dtype) for i in range(L)],
+    )
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(keys[L], (V, D)) * 0.02).astype(dtype),
+        "layers": stacked,
+        "final_ln": _norm_params(cfg, D) or {},
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = _lin(keys[L + 1], D, (D, V), dtype)
+    if cfg.family == "hybrid":
+        k1, k2 = jax.random.split(keys[L + 2])
+        params["shared_attn"] = {
+            "ln1": _norm_params(cfg, D) or {"scale": jnp.ones((D,))},
+            "attn": _attn_params(cfg, k1, dtype),
+            "ln2": _norm_params(cfg, D) or {"scale": jnp.ones((D,))},
+            "mlp": _mlp_params(cfg, k2, dtype),
+        }
+    if cfg.family == "ssm":
+        params["ln0"] = {"scale": jnp.ones((D,)), "bias": jnp.zeros((D,))}
+    if cfg.is_encoder_decoder:
+        enc_keys = jax.random.split(keys[L + 3], cfg.encoder_layers)
+        enc_layers = []
+        for ek in enc_keys:
+            e1, e2 = jax.random.split(ek)
+            enc_layers.append(
+                {
+                    "ln1": _norm_params(cfg, D),
+                    "attn": _attn_params(cfg, e1, dtype),
+                    "ln2": _norm_params(cfg, D),
+                    "mlp": _mlp_params(cfg, e2, dtype),
+                }
+            )
+        params["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc_layers)
+        params["enc_final_ln"] = _norm_params(cfg, D) or {}
+        # decoder cross-attention (stacked with the self-attn layers)
+        xkeys = jax.random.split(keys[L + 4], L)
+        cross = [
+            {"ln": _norm_params(cfg, D), "attn": _attn_params(cfg, xk, dtype)}
+            for xk in xkeys
+        ]
+        params["cross"] = jax.tree.map(lambda *xs: jnp.stack(xs), *cross)
+    return params
+
+
+# =============================================================================
+# layer bodies
+# =============================================================================
+
+
+def _attention_block(
+    cfg: ArchConfig,
+    x: jax.Array,
+    p: dict,
+    cos: jax.Array | None,
+    sin: jax.Array | None,
+    dist: "DistContext",
+    *,
+    causal: bool = True,
+    kv_override: tuple[jax.Array, jax.Array] | None = None,
+) -> jax.Array:
+    B, S, D = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    # kv heads shard on the model axis only when they divide it; otherwise
+    # they are replicated (Megatron GQA convention) — never let the
+    # partitioner split head_dim (a contracted dim) instead.
+    kv_dims = "b.m." if (dist.model_size > 1 and Hkv % dist.model_size == 0) else "b..."
+    q = x @ p["wq"] + (p["bq"] if cfg.qkv_bias else 0.0)
+    q = dist.wsc(q.reshape(B, S, H, hd), "b.m.")
+    if kv_override is None:
+        k = (x @ p["wk"] + (p["bk"] if cfg.qkv_bias else 0.0)).reshape(B, S, Hkv, hd)
+        v = (x @ p["wv"] + (p["bv"] if cfg.qkv_bias else 0.0)).reshape(B, S, Hkv, hd)
+        k = dist.wsc(k, kv_dims)
+        v = dist.wsc(v, kv_dims)
+        if cos is not None:
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+    else:
+        k, v = kv_override
+        k = dist.wsc(k, kv_dims)
+        v = dist.wsc(v, kv_dims)
+        if cos is not None:
+            q = apply_rope(q, cos, sin)
+    out = chunked_attention(
+        q, k, v, causal=causal and kv_override is None, window=cfg.sliding_window
+    )
+    out = dist.wsc(out, "b.m.")
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+def _dense_layer(cfg: ArchConfig, x, p, cos, sin, dist):
+    h = norm(x, p.get("ln1"), cfg.norm)
+    x = x + _attention_block(cfg, h, p["attn"], cos, sin, dist)
+    h = norm(x, p.get("ln2"), cfg.norm)
+    x = x + mlp(h, p["mlp"], cfg.activation)
+    return x
+
+
+def _moe_dense_layer(cfg: ArchConfig, x, p, cos, sin, dist):
+    h = norm(x, p.get("ln1"), cfg.norm)
+    x = x + _attention_block(cfg, h, p["attn"], cos, sin, dist)
+    h = norm(x, p.get("ln2"), cfg.norm)
+    y, aux = moe_layer(
+        h,
+        p["moe"],
+        n_experts=cfg.n_experts,
+        top_k=cfg.top_k,
+        capacity_factor=cfg.capacity_factor,
+        n_token_groups=dist.n_token_groups,
+        expert_parallel=dist.model_size > 1 and cfg.n_experts % dist.model_size == 0,
+        wsc=dist.wsc,
+    )
+    return x + y, aux
+
+
+def _rwkv_layer(cfg: ArchConfig, x, p, dist):
+    h = norm(x, p.get("ln1"), "layernorm")
+    x = x + rwkv6_time_mix(
+        h, p["tm"], n_heads=cfg.d_model // cfg.rwkv_head_dim, head_dim=cfg.rwkv_head_dim,
+        wsc=dist.wsc,
+    )
+    h = norm(x, p.get("ln2"), "layernorm")
+    x = x + rwkv6_channel_mix(h, p["tm"])
+    return x
+
+
+def _mamba_layer(cfg: ArchConfig, x, p, dist):
+    h = norm(x, p.get("ln1"), cfg.norm)
+    return x + mamba2_forward(
+        h, p["mamba"], d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim, wsc=dist.wsc
+    )
+
+
+def _shared_attn_block(cfg: ArchConfig, x, p, cos, sin, dist):
+    h = norm(x, p["ln1"], cfg.norm)
+    x = x + _attention_block(cfg, h, p["attn"], cos, sin, dist)
+    h = norm(x, p["ln2"], cfg.norm)
+    return x + mlp(h, p["mlp"], cfg.activation)
+
+
+# =============================================================================
+# full-sequence forward (train / prefill)
+# =============================================================================
+
+
+@dataclass(frozen=True)
+class DistContext:
+    """Static distribution facts the model math needs: token-group counts for
+    MoE dispatch, and the mesh axis names for explicit sharding constraints.
+
+    The constraints matter: without them the SPMD partitioner is free to
+    shard a GQA head_dim (n_kv*hd reshaped to (n_kv, hd) when n_kv < axis)
+    — a *contracted* dimension — which turns every attention score tensor
+    into a full-size all-reduce inside the chunk loops (observed: 7.5 GB
+    per chunk on qwen2-0.5b). ``wsc`` pins the intended layout; with no
+    axes configured it is the identity (single-device smoke tests).
+    """
+
+    n_token_groups: int = 1
+    remat: bool = True
+    batch_axes: tuple[str, ...] = ()
+    model_axis: str | None = None
+    model_size: int = 1
+    # decode KV caches sequence-sharded on the model axis (serving layout
+    # for archs whose kv-head count does not divide the axis)
+    decode_seq_shard: bool = False
+
+    @property
+    def active(self) -> bool:
+        return bool(self.batch_axes) or self.model_axis is not None
+
+    def wsc(self, x: jax.Array, dims: str) -> jax.Array:
+        """Constrain: dims is a string of 'b' (batch axes), 'm' (model axis),
+        '.' (unsharded) per array dimension, e.g. "b.m." for (B,S,H,d)."""
+        if not self.active:
+            return x
+        from jax.sharding import PartitionSpec as P
+
+        spec = []
+        for d in dims:
+            if d == "b":
+                spec.append(self.batch_axes if len(self.batch_axes) != 1 else self.batch_axes[0])
+            elif d == "m":
+                spec.append(self.model_axis)
+            else:
+                spec.append(None)
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _positions_and_rope(cfg: ArchConfig, batch: dict, S: int, B: int):
+    if cfg.is_encoder_decoder:
+        return None, None  # whisper: learned/sinusoidal positions are in stubs
+    if cfg.m_rope:
+        pos = batch.get("positions")
+        if pos is None:
+            p1 = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            pos = jnp.stack([p1, p1, p1], axis=1)
+        return mrope_freqs(pos, cfg.hd, cfg.rope_theta, cfg.m_rope_sections)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    return rope_freqs(pos, cfg.hd, cfg.rope_theta)
+
+
+def _embed(cfg: ArchConfig, params: dict, batch: dict) -> jax.Array:
+    x = params["embed"][batch["tokens"]]
+    if cfg.frontend == "vision-stub" and "frontend_embeds" in batch:
+        x = x + batch["frontend_embeds"].astype(x.dtype)
+    if cfg.family == "ssm":
+        x = norm(x, params["ln0"], "layernorm")
+    return x
+
+
+def _encoder_forward(cfg: ArchConfig, params: dict, enc_embeds: jax.Array, dist) -> jax.Array:
+    def body(x, p):
+        h = norm(x, p.get("ln1"), cfg.norm)
+        x = x + _attention_block(cfg, h, p["attn"], None, None, dist, causal=False)
+        h = norm(x, p.get("ln2"), cfg.norm)
+        x = x + mlp(h, p["mlp"], cfg.activation)
+        return x, None
+
+    f = jax.checkpoint(body) if dist.remat else body
+    x, _ = jax.lax.scan(f, enc_embeds, params["encoder"])
+    return norm(x, params.get("enc_final_ln") or None, cfg.norm)
+
+
+def forward_hidden(
+    cfg: ArchConfig, params: dict, batch: dict, dist: DistContext
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (final hidden states (B,S,D), aux loss scalar)."""
+    x = _embed(cfg, params, batch)
+    B, S, D = x.shape
+    cos, sin = _positions_and_rope(cfg, batch, S, B)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "vlm"):
+
+        def body(carry, p):
+            return _dense_layer(cfg, carry, p, cos, sin, dist), None
+
+        f = jax.checkpoint(body) if dist.remat else body
+        x, _ = jax.lax.scan(f, x, params["layers"])
+        aux = aux0
+
+    elif cfg.family == "moe":
+
+        def body(carry, p):
+            x, aux = carry
+            x, a = _moe_dense_layer(cfg, x, p, cos, sin, dist)
+            return (x, aux + a), None
+
+        f = jax.checkpoint(body) if dist.remat else body
+        (x, aux), _ = jax.lax.scan(f, (x, aux0), params["layers"])
+
+    elif cfg.family == "ssm":
+
+        def body(carry, p):
+            return _rwkv_layer(cfg, carry, p, dist), None
+
+        f = jax.checkpoint(body) if dist.remat else body
+        x, _ = jax.lax.scan(f, x, params["layers"])
+        aux = aux0
+
+    elif cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // every
+        grouped = jax.tree.map(
+            lambda a: a.reshape(n_groups, every, *a.shape[1:]), params["layers"]
+        )
+
+        def body(carry, p):
+            return _mamba_layer(cfg, carry, p, dist), None
+
+        f = jax.checkpoint(body) if dist.remat else body
+        shared = (
+            jax.checkpoint(
+                lambda x, sp: _shared_attn_block(cfg, x, sp, cos, sin, dist)
+            )
+            if dist.remat
+            else (lambda x, sp: _shared_attn_block(cfg, x, sp, cos, sin, dist))
+        )  # the 9 unrolled shared-attn sites must be remat'd too, else each
+        #    stashes its full activations outside the scan (§Perf residuals)
+        for gi in range(n_groups):
+            p_g = jax.tree.map(lambda a: a[gi], grouped)
+            x, _ = jax.lax.scan(f, x, p_g)
+            x = shared(x, params["shared_attn"])
+        aux = aux0
+
+    elif cfg.family == "audio":
+        enc = _encoder_forward(cfg, params, batch["enc_embeds"].astype(x.dtype), dist)
+        Hkv, hd = cfg.n_kv, cfg.hd
+
+        def body(carry, p):
+            x = carry
+            h = norm(x, p.get("ln1"), cfg.norm)
+            x = x + _attention_block(cfg, h, p["attn"], None, None, dist, causal=True)
+            hq = norm(x, p["cross"]["ln"], cfg.norm)
+            ek = (enc @ p["cross"]["attn"]["wk"]).reshape(B, -1, Hkv, hd)
+            ev = (enc @ p["cross"]["attn"]["wv"]).reshape(B, -1, Hkv, hd)
+            x = x + _attention_block(
+                cfg, hq, p["cross"]["attn"], None, None, dist, causal=False, kv_override=(ek, ev)
+            )
+            h2 = norm(x, p.get("ln2"), cfg.norm)
+            x = x + mlp(h2, p["mlp"], cfg.activation)
+            return x, None
+
+        layers = dict(params["layers"])
+        layers["cross"] = params["cross"]
+        f = jax.checkpoint(body) if dist.remat else body
+        x, _ = jax.lax.scan(f, x, layers)
+        aux = aux0
+    else:
+        raise ValueError(cfg.family)
+
+    x = norm(x, params.get("final_ln") or None, cfg.norm)
+    return x, aux
+
+
+def logits_from_hidden(cfg: ArchConfig, params: dict, h: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return h @ params["embed"].T
+    return h @ params["head"]
+
+
+def loss_fn(
+    cfg: ArchConfig,
+    params: dict,
+    batch: dict,
+    dist: DistContext,
+    *,
+    logit_chunk: int = 512,
+) -> tuple[jax.Array, dict]:
+    """Chunked softmax cross-entropy (never materializes (B,S,V) at once)."""
+    h, aux = forward_hidden(cfg, params, batch, dist)
+    B, S, D = h.shape
+    labels = batch["labels"]
+    C = min(logit_chunk, S)
+    pad = -S % C
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nch = (S + pad) // C
+    hc = h.reshape(B, nch, C, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nch, C).transpose(1, 0, 2)
+
+    def chunk_loss(carry, inp):
+        hch, lch = inp
+        logits = logits_from_hidden(cfg, params, hch).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(lch, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = (lch >= 0).astype(jnp.float32)
+        nll = (lse - tgt) * valid
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    (total, count), _ = jax.lax.scan(chunk_loss, (0.0, 0.0), (hc, lc))
+    ce = total / jnp.maximum(count, 1.0)
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux, "tokens": count}
+
+
+# =============================================================================
+# decode (serve_step)
+# =============================================================================
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=jnp.float32) -> dict:
+    """KV caches / recurrent state sized for ``cache_len`` history."""
+    L, Hkv, hd = cfg.n_layers, cfg.n_kv, cfg.hd
+    if cfg.sliding_window is not None:
+        cache_len = min(cache_len, cfg.sliding_window)
+    if cfg.family in ("dense", "vlm", "moe"):
+        return {
+            "k": jnp.zeros((L, batch, cache_len, Hkv, hd), dtype),
+            "v": jnp.zeros((L, batch, cache_len, Hkv, hd), dtype),
+            "pos": jnp.zeros((), jnp.int32) + cache_len,
+        }
+    if cfg.family == "ssm":
+        caches = [
+            rwkv6_init_cache(batch, cfg.d_model, cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim)
+            for _ in range(L)
+        ]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    if cfg.family == "hybrid":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        H = d_inner // cfg.ssm_head_dim
+        n_sites = cfg.n_layers // cfg.hybrid_attn_every
+        mamba = {
+            "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, d_inner + 2 * cfg.ssm_state), jnp.float32),
+            "ssm": jnp.zeros((L, batch, H, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+        }
+        return {
+            "mamba": mamba,
+            "k": jnp.zeros((n_sites, batch, cache_len, Hkv, hd), dtype),
+            "v": jnp.zeros((n_sites, batch, cache_len, Hkv, hd), dtype),
+            "pos": jnp.zeros((), jnp.int32) + cache_len,
+        }
+    if cfg.family == "audio":
+        Tenc = cfg.encoder_len
+        return {
+            "k": jnp.zeros((L, batch, cache_len, Hkv, hd), dtype),
+            "v": jnp.zeros((L, batch, cache_len, Hkv, hd), dtype),
+            "ek": jnp.zeros((L, batch, Tenc, Hkv, hd), dtype),
+            "ev": jnp.zeros((L, batch, Tenc, Hkv, hd), dtype),
+            "pos": jnp.zeros((), jnp.int32) + cache_len,
+        }
+    raise ValueError(cfg.family)
+
+
+def _decode_attn(
+    cfg: ArchConfig, x: jax.Array, p: dict, kc, vc, cos, sin, fill=None, slot=None,
+    dist: "DistContext | None" = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token attention against a ring-buffer cache: the new KV pair is
+    written to slot ``pos mod T`` (a single-shard dynamic update even when
+    the cache sequence dim is sharded — rolling instead reshuffles every
+    shard boundary, §Perf pair 2), then the token attends the whole cache
+    with age masking (warm-up via ``fill``, SWA via the window).
+    Returns (out, new_k_cache, new_v_cache)."""
+    B, _, D = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    T = kc.shape[1]
+    q = (x @ p["wq"] + (p["bq"] if cfg.qkv_bias else 0.0)).reshape(B, 1, H, hd)
+    k = (x @ p["wk"] + (p["bk"] if cfg.qkv_bias else 0.0)).reshape(B, 1, Hkv, hd)
+    v = (x @ p["wv"] + (p["bv"] if cfg.qkv_bias else 0.0)).reshape(B, 1, Hkv, hd)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    if dist is not None and dist.decode_seq_shard:
+        # T-sharded cache: replicate q over the model axis so the attention
+        # contraction stays T-local (XLA otherwise picks head-parallelism
+        # and all-gathers the whole cache — §Perf pair 2, it.4)
+        q = dist.wsc(q, "b...")
+        kc = dist.wsc(kc, "bm..")
+        vc = dist.wsc(vc, "bm..")
+    if slot is None:  # legacy roll layout (replicated caches only)
+        kc = jnp.concatenate([kc[:, 1:], k.astype(kc.dtype)], axis=1)
+        vc = jnp.concatenate([vc[:, 1:], v.astype(vc.dtype)], axis=1)
+        out = decode_attention(q, kc, vc, window=cfg.sliding_window, fill=fill)
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, axis=1)
+        out = decode_attention(
+            q, kc, vc, window=cfg.sliding_window, fill=fill, slot=slot
+        )
+    return out.reshape(B, 1, H * hd) @ p["wo"], kc, vc
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: dict,
+    token: jax.Array,  # (B, 1) int32
+    cache: dict,
+    dist: DistContext,
+    batch_extras: dict | None = None,
+) -> tuple[jax.Array, dict]:
+    """serve_step: one new token against the cache; returns (logits, cache)."""
+    batch = {"tokens": token, **(batch_extras or {})}
+    x = _embed(cfg, params, batch)
+    B = x.shape[0]
+    pos = cache.get("pos")
+    if cfg.is_encoder_decoder or cfg.family == "ssm":
+        cos = sin = None
+    elif cfg.m_rope:
+        p3 = jnp.broadcast_to(pos[None, None, None], (B, 3, 1))
+        cos, sin = mrope_freqs(p3, cfg.hd, cfg.rope_theta, cfg.m_rope_sections)
+    else:
+        p1 = jnp.broadcast_to(pos[None, None], (B, 1))
+        cos, sin = rope_freqs(p1, cfg.hd, cfg.rope_theta)
+
+    new_cache = dict(cache)
+    fill = None if pos is None else jnp.minimum(pos + 1, jnp.int32(2**30))
+    cache_len = cache["k"].shape[2] if "k" in cache else 0
+    slot = None if (pos is None or not cache_len) else (pos % cache_len).astype(jnp.int32)
+    if cfg.family in ("dense", "vlm", "moe"):
+
+        def body(x, inp):
+            p, kc, vc = inp
+            h = norm(x, p.get("ln1"), cfg.norm)
+            att, kc, vc = _decode_attn(cfg, h, p["attn"] if "attn" in p else p, kc, vc, cos, sin, fill, slot, dist)
+            x = x + att
+            h = norm(x, p.get("ln2"), cfg.norm)
+            if cfg.family == "moe":
+                y, _ = moe_layer(
+                    h,
+                    p["moe"],
+                    n_experts=cfg.n_experts,
+                    top_k=cfg.top_k,
+                    capacity_factor=cfg.capacity_factor,
+                    n_token_groups=1,
+                )
+                x = x + y
+            else:
+                x = x + mlp(h, p["mlp"], cfg.activation)
+            return x, (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache["k"], new_cache["v"] = ks, vs
+
+    elif cfg.family == "ssm":
+        H, hd = cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+
+        def body(x, inp):
+            p, c = inp
+            h = norm(x, p.get("ln1"), "layernorm")[:, 0]
+            y, wkv = rwkv6_time_mix_step(
+                h, c["shift_t"], c["wkv"], p["tm"], n_heads=H, head_dim=hd
+            )
+            x = x + y[:, None]
+            h2 = norm(x, p.get("ln2"), "layernorm")[:, 0]
+            y2 = rwkv6_channel_mix_step(h2, c["shift_c"], p["tm"])
+            x = x + y2[:, None]
+            new_c = {"shift_t": h.astype(jnp.float32), "shift_c": h2.astype(jnp.float32), "wkv": wkv}
+            return x, new_c
+
+        x, new_states = jax.lax.scan(body, x, (params["layers"], cache))
+        new_cache = new_states
+
+    elif cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // every
+        grouped_p = jax.tree.map(
+            lambda a: a.reshape(n_groups, every, *a.shape[1:]), params["layers"]
+        )
+        grouped_c = jax.tree.map(
+            lambda a: a.reshape(n_groups, every, *a.shape[1:]), cache["mamba"]
+        )
+
+        def body(x, inp):
+            p, c = inp
+            h = norm(x, p.get("ln1"), cfg.norm)
+            y, new_c = mamba2_decode_step(
+                h, c, p["mamba"], d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim
+            )
+            return x + y, new_c
+
+        new_mamba_groups = []
+        ks, vs = [], []
+        for gi in range(n_groups):
+            p_g = jax.tree.map(lambda a: a[gi], grouped_p)
+            c_g = jax.tree.map(lambda a: a[gi], grouped_c)
+            x, nc = jax.lax.scan(body, x, (p_g, c_g))
+            new_mamba_groups.append(nc)
+            sp = params["shared_attn"]
+            h = norm(x, sp["ln1"], cfg.norm)
+            att, kc, vc = _decode_attn(
+                cfg, h, sp["attn"], cache["k"][gi], cache["v"][gi], cos, sin, fill, slot, dist
+            )
+            x = x + att
+            h = norm(x, sp["ln2"], cfg.norm)
+            x = x + mlp(h, sp["mlp"], cfg.activation)
+            ks.append(kc)
+            vs.append(vc)
+        new_cache["mamba"] = jax.tree.map(
+            lambda *xs: jnp.concatenate([a for a in xs], axis=0),
+            *new_mamba_groups,
+        )
+        new_cache["k"] = jnp.stack(ks)
+        new_cache["v"] = jnp.stack(vs)
+
+    elif cfg.family == "audio":
+
+        def body(x, inp):
+            p, kc, vc, ek, ev = inp
+            h = norm(x, p.get("ln1"), cfg.norm)
+            att, kc, vc = _decode_attn(cfg, h, p["attn"], kc, vc, None, None, fill, slot, dist)
+            x = x + att
+            hq = norm(x, p["cross"]["ln"], cfg.norm)
+            B = x.shape[0]
+            H, hd = cfg.n_heads, cfg.hd
+            q = (hq @ p["cross"]["attn"]["wq"]).reshape(B, 1, H, hd)
+            xatt = decode_attention(q, ek, ev)
+            x = x + xatt.reshape(B, 1, H * hd) @ p["cross"]["attn"]["wo"]
+            h2 = norm(x, p.get("ln2"), cfg.norm)
+            x = x + mlp(h2, p["mlp"], cfg.activation)
+            return x, (kc, vc)
+
+        layers = dict(params["layers"])
+        layers["cross"] = params["cross"]
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (layers, cache["k"], cache["v"], cache["ek"], cache["ev"])
+        )
+        new_cache["k"], new_cache["v"] = ks, vs
+    else:
+        raise ValueError(cfg.family)
+
+    x = norm(x, params.get("final_ln") or None, cfg.norm)
+    logits = logits_from_hidden(cfg, params, x)
+    if pos is not None:
+        new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+# =============================================================================
+# public bundle
+# =============================================================================
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    dist: DistContext
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> dict:
+        return init_params(self.cfg, key, dtype)
+
+    def loss(self, params, batch):
+        return loss_fn(self.cfg, params, batch, self.dist)
+
+    def hidden(self, params, batch):
+        return forward_hidden(self.cfg, params, batch, self.dist)
+
+    def logits(self, params, batch):
+        h, aux = forward_hidden(self.cfg, params, batch, self.dist)
+        return logits_from_hidden(self.cfg, params, h)
+
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.float32):
+        return init_cache(self.cfg, batch, cache_len, dtype)
+
+    def decode(self, params, token, cache, batch_extras=None):
+        return decode_step(self.cfg, params, token, cache, self.dist, batch_extras)
+
+
+def build_model(cfg: ArchConfig | str, dist: DistContext | None = None) -> Model:
+    if isinstance(cfg, str):
+        cfg = get_config(cfg)
+    return Model(cfg=cfg, dist=dist or DistContext())

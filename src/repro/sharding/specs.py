@@ -1,0 +1,243 @@
+"""PartitionSpec rules for all architectures and input shapes.
+
+Baseline layout = TP ("model" axis) x FSDP ("data" axis) x pure DP ("pod"):
+
+* every weight matrix is sharded on "model" along its parallel dimension
+  (column-parallel in, row-parallel out — Megatron style) *and* on "data"
+  along the other dimension (FSDP storage sharding; XLA all-gathers per
+  layer inside the scan);
+* the "pod" axis only shards the batch: parameters are replicated across
+  pods, so gradient all-reduces are the only inter-pod collectives —
+  the slow inter-pod links see O(params/pod) traffic per step, not
+  per-layer traffic;
+* optimizer state (fp32 master + moments) inherits the parameter specs —
+  with FSDP params this is full ZeRO sharding;
+* MoE experts: expert dim on "model" when divisible (true EP: granite-moe
+  32e/16) else d_ff on "model" (TP inside each expert: mixtral 8e/16);
+* KV caches: batch on ("pod","data"), kv-heads on "model" — except
+  ``long_500k`` (batch=1) where the *sequence* dim is sharded on
+  ("pod","data") and decode becomes a distributed flash-decode.
+
+GSPMD pads uneven dimensions (e.g. vocab 49155, kv-heads 2 on a 16-way
+axis), so divisibility is not required for correctness.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..configs.shapes import ShapeConfig
+
+__all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "opt_state_pspecs", "BATCH_AXES"]
+
+BATCH_AXES = ("pod", "data")  # present axes are filtered per mesh
+
+
+def _ax(mesh_axes: tuple[str, ...], *names: str):
+    """Axis tuple filtered to the axes the mesh actually has."""
+    present = tuple(n for n in names if n in mesh_axes)
+    if not present:
+        return None
+    return present if len(present) > 1 else present[0]
+
+
+# default production-mesh axis sizes; callers pass the real ones
+DEFAULT_AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _sanitize(spec: P, shape: tuple[int, ...], axis_sizes: dict[str, int]) -> P:
+    """Explicit jit in_shardings require exact divisibility (GSPMD padding is
+    only available to *internal* propagation) — drop axes that do not divide
+    their dimension (the tensor is then replicated over them)."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for n in names:
+            prod *= axis_sizes.get(n, 1)
+        if prod and dim % prod == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# -- parameters ---------------------------------------------------------------
+
+_COL_IN = {  # (D_in, X_out): in-dim FSDP, out-dim TP
+    "wq", "wk", "wv", "w_gate", "w_up", "w_ck", "w_cr", "w_r", "w_k", "w_v",
+    "w_g", "in_proj", "w_lora_a",
+}
+_ROW_OUT = {"wo", "w_down", "w_cv", "out_proj", "w_o", "w_lora_b"}
+_REPLICATED = {
+    "scale", "bias", "A_log", "D_skip", "dt_bias", "norm_scale", "u", "w0",
+    "ln_x_scale", "ln_x_bias", "conv_b", "mu_r", "mu_k", "mu_v", "mu_g",
+    "mu_w", "mu_ck", "mu_cr",
+}
+
+
+def _leaf_spec(
+    cfg: ArchConfig, path: tuple, leaf, mesh_axes, fsdp: bool = True,
+    layout: str = "tp-fsdp",
+) -> P:
+    names = [p.key for p in path if hasattr(p, "key")]
+    name = names[-1]
+    ndim = len(leaf.shape)
+    stacked = any(n in ("layers", "encoder", "cross") for n in names)
+    lead = (None,) if stacked else ()
+    # fsdp=False (serving layout): params replicated over "data" — decoding
+    # has no optimizer state to shard and per-layer param all-gathers are
+    # pure overhead at batch 1 token/step (§Perf pair 2, iteration 3)
+    data = _ax(mesh_axes, "data") if fsdp else None
+    model = _ax(mesh_axes, "model")
+    if layout == "fsdp":
+        # pure-FSDP layout: no tensor parallelism; the model axis becomes a
+        # second data axis — params are storage-sharded over both and
+        # gathered per layer (§Perf pair 1/3 beyond-paper iteration)
+        data = _ax(mesh_axes, "data", "model") if fsdp else None
+        model = None
+
+    def pad(spec_tail: tuple) -> P:
+        tail = lead + spec_tail
+        assert len(tail) == ndim, (names, leaf.shape, tail)
+        return P(*tail)
+
+    if name == "embed":
+        return P(model, data)
+    if name == "head":
+        return P(data, model)
+    if name == "router":
+        return pad((data, None))
+    if "moe" in names and name in ("w_gate", "w_up"):
+        if cfg.n_experts % 16 == 0:  # expert parallelism
+            return pad((model, data, None))
+        return pad((None, data, model))  # TP inside experts
+    if "moe" in names and name == "w_down":
+        if cfg.n_experts % 16 == 0:
+            return pad((model, None, data))
+        return pad((None, model, data))
+    if name == "conv_w":
+        return pad((None, model))
+    if name in ("bq", "bk", "bv"):
+        return pad((model,))
+    if name in _REPLICATED:
+        return pad((None,) * (ndim - len(lead)))
+    if name in _COL_IN:
+        return pad((data, model))
+    if name in _ROW_OUT:
+        return pad((model, data))
+    # fallback: replicate
+    return P(*((None,) * ndim))
+
+
+def param_pspecs(
+    cfg: ArchConfig,
+    params_shapes: Any,
+    mesh_axes: tuple[str, ...],
+    axis_sizes: dict[str, int] | None = None,
+    fsdp: bool = True,
+    layout: str = "tp-fsdp",
+) -> Any:
+    """Spec tree matching the parameter tree (built from eval_shape output)."""
+    sizes = axis_sizes or DEFAULT_AXIS_SIZES
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _sanitize(
+            _leaf_spec(cfg, path, leaf, mesh_axes, fsdp, layout), leaf.shape, sizes
+        ),
+        params_shapes,
+    )
+
+
+def opt_state_pspecs(
+    cfg: ArchConfig,
+    opt_shapes: Any,
+    mesh_axes: tuple[str, ...],
+    axis_sizes: dict[str, int] | None = None,
+    layout: str = "tp-fsdp",
+) -> Any:
+    """Optimizer state: step replicated; master/m/v inherit param specs."""
+    sizes = axis_sizes or DEFAULT_AXIS_SIZES
+
+    def spec(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        if names and names[0] == "step":
+            return P()
+        return _sanitize(
+            _leaf_spec(cfg, path[1:], leaf, mesh_axes, True, layout), leaf.shape, sizes
+        )
+
+    return jax.tree_util.tree_map_with_path(spec, opt_shapes)
+
+
+# -- batches ---------------------------------------------------------------------
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeConfig, mesh_axes, layout: str = "tp-fsdp") -> dict:
+    b = _ax(mesh_axes, "pod", "data") if layout != "fsdp" else _ax(mesh_axes, "pod", "data", "model")
+    model = _ax(mesh_axes, "model") if layout != "fsdp" else None
+    out: dict[str, P] = {"tokens": P(b, None), "labels": P(b, None)}
+    if shape.kind == "decode":
+        if shape.global_batch == 1:
+            out = {"tokens": P(None, None), "labels": P(None, None)}
+    if cfg.m_rope:
+        out["positions"] = P(out["tokens"][0], None, None)
+        out["frontend_embeds"] = P(out["tokens"][0], None, model)
+    if cfg.is_encoder_decoder:
+        out["enc_embeds"] = P(out["tokens"][0], None, model)
+    return out
+
+
+# -- caches -----------------------------------------------------------------------
+
+
+def cache_pspecs(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    cache_shapes: Any,
+    mesh_axes,
+    axis_sizes: dict[str, int] | None = None,
+) -> Any:
+    """Spec tree matching init_cache's structure."""
+    sizes = axis_sizes or DEFAULT_AXIS_SIZES
+    bax = _ax(mesh_axes, "pod", "data")
+    model = _ax(mesh_axes, "model")
+    seq_shard = shape.global_batch == 1  # long_500k: shard the KV sequence
+
+    model_size = sizes.get("model", 1)
+
+    def spec(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1]
+        if name == "pos":
+            return P()
+        if name in ("k", "v", "ek", "ev"):  # (L, B, T, Hkv, hd)
+            if seq_shard:
+                return P(None, None, bax, model, None)
+            if cfg.n_kv % max(model_size, 1) == 0:
+                return P(None, bax, None, model, None)
+            # kv heads do not divide the model axis: shard the cache
+            # *sequence* dim on it instead (distributed flash-decode) —
+            # batch-only sharding leaves 36-241 GiB/device and a full
+            # cache all-gather per step (§Perf pair 2).
+            return P(None, bax, model, None, None)
+        if name == "conv":  # (L, B, K-1, conv_dim)
+            return P(None, bax if not seq_shard else None, None, model)
+        if name == "ssm":  # (L, B, H, N, P)
+            return P(None, bax if not seq_shard else None, model, None, None)
+        if name == "wkv":  # (L, B, H, hd, hd)
+            return P(None, bax if not seq_shard else None, model, None, None)
+        if name in ("shift_t", "shift_c"):  # (L, B, D)
+            return P(None, bax if not seq_shard else None, None)
+        return P(*((None,) * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _sanitize(spec(path, leaf), leaf.shape, sizes), cache_shapes
+    )

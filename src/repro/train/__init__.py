@@ -1,0 +1,16 @@
+"""Training substrate: optimizer, train/serve steps, data pipeline,
+checkpointing, elasticity — plus the paper-technique integration points
+(diffusion-balanced data buckets, MoE expert placement)."""
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+from .train_step import make_train_step
+from .data import SyntheticTokenPipeline, diffusion_assign_buckets
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "make_train_step",
+    "SyntheticTokenPipeline",
+    "diffusion_assign_buckets",
+]

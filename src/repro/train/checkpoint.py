@@ -1,0 +1,64 @@
+"""LM-plane step checkpointing (params + optimizer + data-pipeline state).
+
+Mirrors the AMR plane's §4.1 design: everything needed to resume — including
+on a different device count — is serialized. Leaves are stored as one .npz
+keyed by flattened tree paths, so restore is layout-independent: the restored
+arrays are re-sharded by whatever in_shardings the new mesh uses.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save_train_state", "load_train_state"]
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_train_state(
+    path: str | Path,
+    *,
+    params: Any,
+    opt_state: Any,
+    step: int,
+    meta: dict | None = None,
+) -> None:
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    np.savez(path / "params.npz", **_flatten(params))
+    np.savez(path / "opt_state.npz", **_flatten(opt_state))
+    (path / "meta.json").write_text(json.dumps({"step": step, **(meta or {})}))
+
+
+def load_train_state(path: str | Path, params_like: Any, opt_like: Any):
+    """Restore into the given tree structures (from eval_shape or init)."""
+    path = Path(path)
+    p_flat = np.load(path / "params.npz")
+    o_flat = np.load(path / "opt_state.npz")
+
+    def rebuild(like, flat):
+        leaves = []
+        for p, leaf in jax.tree_util.tree_flatten_with_path(like)[0]:
+            key = "/".join(str(getattr(x, "key", getattr(x, "idx", x))) for x in p)
+            arr = flat[key]
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            leaves.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), leaves
+        )
+
+    meta = json.loads((path / "meta.json").read_text())
+    return rebuild(params_like, p_flat), rebuild(opt_like, o_flat), meta

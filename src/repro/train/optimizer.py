@@ -1,0 +1,87 @@
+"""AdamW with fp32 master weights (mixed precision / ZeRO-1 ready).
+
+The optimizer state (master params + both moments) carries its own sharding
+specs from :mod:`repro.sharding.specs`: moments and masters are sharded like
+the parameters *plus* an extra data-axis sharding on the largest replicated
+axis (ZeRO-1), so optimizer memory per device shrinks with the data-parallel
+degree. Compute params may be bf16; updates happen in fp32 on the master.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def _schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    return cfg.lr * warm
+
+
+def adamw_init(params: Any) -> dict:
+    f32 = lambda x: x.astype(jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+    }
+
+
+def adamw_update(
+    grads: Any, opt_state: dict, params: Any, cfg: AdamWConfig
+) -> tuple[Any, dict, dict]:
+    """Returns (new params in the original dtype, new opt state, stats)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = _schedule(cfg, opt_state["step"])
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * master
+        master_new = master - lr * delta
+        return m_new, v_new, master_new, master_new.astype(p.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_ma = treedef.flatten_up_to(opt_state["master"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(*args) for args in zip(flat_g, flat_m, flat_v, flat_ma, flat_p)]
+    new_state = {
+        "step": step,
+        "m": jax.tree.unflatten(treedef, [o[0] for o in out]),
+        "v": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "master": jax.tree.unflatten(treedef, [o[2] for o in out]),
+    }
+    new_params = jax.tree.unflatten(treedef, [o[3] for o in out])
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

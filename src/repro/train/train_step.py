@@ -1,0 +1,69 @@
+"""train_step / serve_step factories (jit-ready, donate-friendly)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models.zoo import Model
+from .optimizer import AdamWConfig, adamw_update
+
+__all__ = ["make_train_step", "make_serve_step"]
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+) -> Callable:
+    """Build ``train_step(params, opt_state, batch) -> (params, opt, metrics)``.
+
+    With ``microbatches > 1`` the global batch is split on the leading axis
+    and gradients are accumulated in fp32 through a scan — bounding peak
+    activation memory to one microbatch regardless of the global batch.
+    """
+
+    grad_fn = jax.value_and_grad(lambda p, b: model.loss(p, b), has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+
+            def split(x):
+                B = x.shape[0]
+                return x.reshape(microbatches, B // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb_i):
+                g_acc, l_acc = carry
+                (loss, _m), g = grad_fn(params, mb_i)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / microbatches, g_acc, g
+                )
+                return (g_acc, l_acc + loss / microbatches), None
+
+            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc_step, (g0, 0.0), mb)
+            metrics = {}
+        params, opt_state, stats = adamw_update(grads, opt_state, params, opt_cfg)
+        out = {"loss": loss, **stats}
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_serve_step(model: Model, *, greedy: bool = True) -> Callable:
+    """``serve_step(params, token, cache, extras) -> (next_token, cache)``."""
+
+    def serve_step(params, token, cache, extras=None):
+        logits, cache = model.decode(params, token, cache, extras)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return serve_step

@@ -1,0 +1,31 @@
+import random
+
+import pytest
+
+from repro.core import Comm, ForestGeometry, make_uniform_forest
+
+
+@pytest.fixture
+def geom():
+    return ForestGeometry(root_grid=(2, 2, 1), max_level=8)
+
+
+@pytest.fixture
+def geom3d():
+    return ForestGeometry(root_grid=(2, 2, 2), max_level=8)
+
+
+def make_random_marks(seed: int, p_refine: float = 0.3, p_coarsen: float = 0.3):
+    rng = random.Random(seed)
+
+    def mark(rank, blocks):
+        out = {}
+        for bid, blk in blocks.items():
+            x = rng.random()
+            if x < p_refine:
+                out[bid] = blk.level + 1
+            elif x < p_refine + p_coarsen:
+                out[bid] = blk.level - 1
+        return out
+
+    return mark

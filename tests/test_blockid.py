@@ -1,0 +1,100 @@
+"""Block ID scheme, Morton/Hilbert keys, adjacency geometry."""
+
+import itertools
+
+import pytest
+
+from repro.core.blockid import (
+    ForestGeometry,
+    children_ids,
+    hilbert_index_3d,
+    octant_of,
+    parent_id,
+    sibling_ids,
+)
+
+
+def test_id_roundtrip():
+    geom = ForestGeometry(root_grid=(3, 2, 2), max_level=10)
+    for root in range(geom.num_roots):
+        bid = geom.root_id(root)
+        assert geom.level_of(bid) == 0
+        assert geom.root_of(bid) == root
+        for o in range(8):
+            ch = children_ids(bid)[o]
+            assert octant_of(ch) == o
+            assert parent_id(ch) == bid
+            assert geom.level_of(ch) == 1
+            assert geom.root_of(ch) == root
+
+
+def test_coords_roundtrip():
+    geom = ForestGeometry(root_grid=(2, 1, 1), max_level=8)
+    for level in (1, 2, 3):
+        n = 1 << level
+        for x, y, z in [(0, 0, 0), (n - 1, n - 1, n - 1), (1, 0, n - 1)]:
+            bid = geom.id_from_coords(level, x, y, z, root_idx=1)
+            assert geom.block_coords(bid) == (level, x, y, z)
+            assert geom.root_of(bid) == 1
+
+
+def test_aabb_and_adjacency():
+    geom = ForestGeometry(root_grid=(2, 1, 1), max_level=4)
+    r0, r1 = geom.root_id(0), geom.root_id(1)
+    assert geom.adjacent(r0, r1)
+    assert geom.adjacency_kind(r0, r1) == "face"
+    # children across the root boundary touch by face/edge/corner
+    c0 = geom.id_from_coords(1, 1, 0, 0, 0)  # right half of root 0
+    c1 = geom.id_from_coords(1, 0, 0, 0, 1)  # left half of root 1
+    assert geom.adjacency_kind(c0, c1) == "face"
+    c2 = geom.id_from_coords(1, 0, 1, 1, 1)
+    assert geom.adjacency_kind(c0, c2) in ("edge", "corner")
+    # non-neighbors
+    far = geom.id_from_coords(1, 1, 1, 1, 1)
+    near = geom.id_from_coords(1, 0, 0, 0, 0)
+    assert not geom.adjacent(near, far)
+
+
+def test_neighbor_region_ids_cross_root():
+    geom = ForestGeometry(root_grid=(2, 2, 1), max_level=6)
+    bid = geom.id_from_coords(1, 1, 1, 0, 0)  # corner block of root 0
+    nb = geom.neighbor_region_ids(bid, 1, 0, 0)
+    assert nb is not None and geom.root_of(nb) == 1
+    assert geom.adjacency_kind(bid, nb) == "face"
+    out = geom.neighbor_region_ids(bid, 0, 0, -1)  # below the domain
+    assert out is None
+
+
+def test_morton_key_orders_levels_depth_first():
+    geom = ForestGeometry(root_grid=(1, 1, 1), max_level=6)
+    root = geom.root_id(0)
+    # leaves: children of child0 + children 1..7
+    leaves = list(children_ids(children_ids(root)[0])) + list(children_ids(root))[1:]
+    order = sorted(leaves, key=geom.morton_key)
+    # the 8 grandchildren (inside octant 0) must come before octant 1..7
+    assert all(geom.level_of(b) == 2 for b in order[:8])
+    assert all(geom.level_of(b) == 1 for b in order[8:])
+
+
+@pytest.mark.parametrize("nbits", [1, 2, 3])
+def test_hilbert_curve_is_a_hamiltonian_face_path(nbits):
+    """The defining property the paper exploits (§2.4.1): consecutive cells
+    along the Hilbert curve are always connected via faces."""
+    n = 1 << nbits
+    cells = {}
+    for x, y, z in itertools.product(range(n), repeat=3):
+        h = hilbert_index_3d(nbits, x, y, z)
+        assert h not in cells, "hilbert index collision"
+        cells[h] = (x, y, z)
+    assert len(cells) == n**3
+    for i in range(1, n**3):
+        a, b = cells[i - 1], cells[i]
+        dist = sum(abs(p - q) for p, q in zip(a, b))
+        assert dist == 1, f"hilbert jump {a}->{b}"
+
+
+def test_sibling_ids():
+    geom = ForestGeometry(root_grid=(1, 1, 1), max_level=4)
+    ch = children_ids(geom.root_id(0))
+    for c in ch:
+        assert set(sibling_ids(c)) == set(ch)

@@ -1,0 +1,73 @@
+"""Checkpoint/restart (§4.1) and buddy-snapshot resilience (§4.2)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AMRPipeline,
+    BlockDataRegistry,
+    Comm,
+    DiffusionBalancer,
+    make_uniform_forest,
+)
+from repro.core.checkpoint import load_checkpoint, save_checkpoint
+from repro.core.resilience import ResilienceManager
+
+
+def _forest_with_payload(geom, nranks):
+    forest = make_uniform_forest(geom, nranks, level=1)
+    for b in forest.all_blocks():
+        b.data["payload"] = np.full((3,), float(b.bid % 1000))
+    return forest
+
+
+def test_checkpoint_roundtrip_same_ranks(geom, tmp_path):
+    reg = BlockDataRegistry.trivial()
+    forest = _forest_with_payload(geom, 4)
+    save_checkpoint(forest, reg, tmp_path)
+    restored = load_checkpoint(tmp_path, reg, nranks=4)
+    restored.check_all()
+    assert restored.num_blocks() == forest.num_blocks()
+    for b in restored.all_blocks():
+        assert float(b.data["payload"][0]) == float(b.bid % 1000)
+
+
+@pytest.mark.parametrize("new_ranks", [2, 7])
+def test_checkpoint_restart_on_different_rank_count(geom, tmp_path, new_ranks):
+    reg = BlockDataRegistry.trivial()
+    forest = _forest_with_payload(geom, 4)
+    save_checkpoint(forest, reg, tmp_path)
+    restored = load_checkpoint(tmp_path, reg, nranks=new_ranks)
+    restored.check_all()
+    assert restored.num_blocks() == forest.num_blocks()
+    counts = restored.blocks_per_rank()
+    assert max(counts) - min(counts) <= max(2, forest.num_blocks() // new_ranks)
+
+
+def test_resilience_restores_after_failures(geom):
+    reg = BlockDataRegistry.trivial()
+    forest = _forest_with_payload(geom, 8)
+    n_blocks = forest.num_blocks()
+    pipe = AMRPipeline(
+        balancer=DiffusionBalancer(mode="pushpull", flow_iterations=5, max_main_iterations=20),
+        registry=reg,
+    )
+    comm = Comm(8)
+    mgr = ResilienceManager(reg)
+    mgr.snapshot(forest, comm)
+    restored, comm2 = mgr.fail_and_restore(forest, failed={1, 2, 7}, pipeline=pipe)
+    restored.check_all()
+    assert restored.nranks == 5
+    assert restored.num_blocks() == n_blocks
+    for b in restored.all_blocks():
+        assert float(b.data["payload"][0]) == float(b.bid % 1000)
+
+
+def test_resilience_rejects_buddy_pair_failure(geom):
+    reg = BlockDataRegistry.trivial()
+    forest = _forest_with_payload(geom, 8)
+    pipe = AMRPipeline(balancer=DiffusionBalancer(), registry=reg)
+    mgr = ResilienceManager(reg)
+    mgr.snapshot(forest, Comm(8))
+    with pytest.raises(AssertionError, match="buddy pair"):
+        mgr.fail_and_restore(forest, failed={2, 6}, pipeline=pipe)  # 6 = buddy of 2

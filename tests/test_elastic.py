@@ -1,0 +1,56 @@
+"""LM-plane checkpointing + elasticity control logic."""
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.zoo import DistContext, build_model
+from repro.train.checkpoint import load_train_state, save_train_state
+from repro.train.elastic import StragglerMonitor, plan_shrink
+from repro.train.optimizer import adamw_init
+
+
+def test_train_state_roundtrip(tmp_path):
+    cfg = get_config("qwen2-0.5b").reduced()
+    model = build_model(cfg, DistContext(remat=False))
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    save_train_state(tmp_path, params=params, opt_state=opt, step=42, meta={"arch": cfg.arch_id})
+    p2, o2, meta = load_train_state(tmp_path, params, opt)
+    assert meta["step"] == 42 and meta["arch"] == cfg.arch_id
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(o2["step"]) == int(opt["step"])
+
+
+def test_straggler_monitor_shifts_load_away_from_slow_host():
+    mon = StragglerMonitor(n_hosts=4)
+    # host 2 is 3x slower
+    for _ in range(5):
+        mon.observe(np.array([1.0, 1.0, 3.0, 1.0]))
+    caps = mon.capacities()
+    assert caps[2] < 0.5 and caps[0] > 0.9
+    rng = np.random.default_rng(0)
+    buckets = list(rng.pareto(1.5, 32) + 0.5)
+    assign, _ = mon.rebalance_buckets(buckets)
+    loads = np.zeros(4)
+    for w, h in zip(buckets, assign):
+        loads[h] += w
+    # the slow host gets materially less than a fair share
+    assert loads[2] < sum(buckets) / 4
+
+
+def test_plan_shrink_keeps_model_axis():
+    rng = np.random.default_rng(1)
+    buckets = list(rng.pareto(1.5, 24) + 0.5)
+    plan = plan_shrink(
+        alive_hosts=[0, 1, 3, 4, 6, 7],  # lost hosts 2 and 5
+        chips_per_host=8,
+        model_parallel=16,
+        last_checkpoint_step=1000,
+        bucket_tokens=buckets,
+    )
+    assert plan.mesh_shape == (3, 16)  # 48 chips / 16-way TP
+    assert plan.resume_step == 1000
+    assert len(plan.bucket_assignment) == 24
+    assert set(plan.bucket_assignment) <= set(range(6))

@@ -1,0 +1,63 @@
+"""HLO parser: loop-corrected collective bytes and dot FLOPs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
+
+
+def test_scan_dot_flops_are_trip_count_corrected():
+    """cost_analysis counts while bodies once; analyze_hlo must multiply by
+    the recovered trip count."""
+
+    def f(x, w):
+        y, _ = jax.lax.scan(lambda c, wi: (c @ wi, None), x, w)
+        return y
+
+    x = jnp.ones((64, 64))
+    flops = {}
+    for L in (3, 6):
+        comp = jax.jit(f).lower(x, jnp.ones((L, 64, 64))).compile()
+        stats = analyze_hlo(comp.as_text())
+        flops[L] = stats.dot_flops_total
+    per_iter = 2 * 64 * 64 * 64
+    assert abs(flops[3] - 3 * per_iter) / (3 * per_iter) < 0.05, flops
+    assert abs(flops[6] - 6 * per_iter) / (6 * per_iter) < 0.05, flops
+
+
+def test_nested_scan_multipliers():
+    def f(x, w):
+        def outer(c, wi):
+            def inner(ci, _):
+                return ci @ wi, None
+
+            c2, _ = jax.lax.scan(inner, c, None, length=4)
+            return c2, None
+
+        y, _ = jax.lax.scan(outer, x, w)
+        return y
+
+    comp = jax.jit(f).lower(jnp.ones((32, 32)), jnp.ones((5, 32, 32))).compile()
+    stats = analyze_hlo(comp.as_text())
+    per_iter = 2 * 32 * 32 * 32
+    expect = 5 * 4 * per_iter
+    assert abs(stats.dot_flops_total - expect) / expect < 0.05
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(
+        flops_per_device=197e12,  # 1 second of compute
+        hbm_bytes_per_device=819e9 * 0.5,
+        collective_bytes_per_device=0.0,
+    )
+    assert t["dominant"] == "compute_s"
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert 0.99 < t["roofline_fraction"] <= 1.0
+    t2 = roofline_terms(
+        flops_per_device=197e12 * 0.1,
+        hbm_bytes_per_device=0.0,
+        collective_bytes_per_device=200e9 * 4,  # 4 seconds on links
+    )
+    assert t2["dominant"] == "collective_s"
+    assert t2["roofline_fraction"] < 0.05

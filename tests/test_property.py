@@ -1,0 +1,114 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import math
+
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import (
+    AMRPipeline,
+    BlockDataRegistry,
+    Comm,
+    DiffusionBalancer,
+    ForestGeometry,
+    SFCBalancer,
+    make_uniform_forest,
+)
+from repro.core.blockid import hilbert_index_3d
+
+GEOM = ForestGeometry(root_grid=(2, 2, 1), max_level=8)
+
+_slow = settings(
+    max_examples=12,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+@given(seed=st.integers(0, 10_000), nranks=st.sampled_from([2, 4, 7]))
+@_slow
+def test_pipeline_preserves_all_invariants(seed, nranks):
+    """After any random mark pattern + diffusion rebalance: leaf cover, exact
+    symmetric adjacency, 2:1 balance, payload conservation."""
+    import random
+
+    forest = make_uniform_forest(GEOM, nranks, level=1)
+    n_payload = forest.num_blocks()
+    for b in forest.all_blocks():
+        b.data["payload"] = 1.0
+    comm = Comm(nranks)
+    rng = random.Random(seed)
+
+    def mark(rank, blocks):
+        out = {}
+        for bid, blk in blocks.items():
+            x = rng.random()
+            if x < 0.4:
+                out[bid] = blk.level + 1
+            elif x < 0.7:
+                out[bid] = blk.level - 1
+        return out
+
+    pipe = AMRPipeline(
+        balancer=DiffusionBalancer(mode="pushpull", flow_iterations=5, max_main_iterations=20),
+        registry=BlockDataRegistry.trivial("payload"),
+    )
+    forest, _ = pipe.run_cycle(forest, comm, mark)
+    forest.check_all()
+    for b in forest.all_blocks():
+        assert "payload" in b.data
+
+
+@given(seed=st.integers(0, 10_000))
+@_slow
+def test_sfc_balancing_is_deterministic_and_perfect(seed):
+    import random
+
+    nranks = 4
+    forest = make_uniform_forest(GEOM, nranks, level=1)
+    comm = Comm(nranks)
+    rng = random.Random(seed)
+
+    def mark(rank, blocks):
+        return {
+            bid: blk.level + 1 for bid, blk in blocks.items() if rng.random() < 0.3
+        }
+
+    pipe = AMRPipeline(balancer=SFCBalancer(order="hilbert"), registry=BlockDataRegistry.trivial())
+    forest, _ = pipe.run_cycle(forest, comm, mark)
+    for lvl in forest.levels_in_use():
+        counts = forest.blocks_per_rank(lvl)
+        assert max(counts) <= math.ceil(sum(counts) / nranks)
+
+
+@given(
+    nbits=st.integers(1, 4),
+    xyz=st.tuples(st.integers(0, 15), st.integers(0, 15), st.integers(0, 15)),
+)
+@settings(max_examples=60, deadline=None)
+def test_hilbert_index_bijective_in_range(nbits, xyz):
+    n = 1 << nbits
+    x, y, z = (c % n for c in xyz)
+    h = hilbert_index_3d(nbits, x, y, z)
+    assert 0 <= h < n**3
+
+
+@given(seed=st.integers(0, 10_000), nranks=st.sampled_from([3, 5, 8]))
+@_slow
+def test_diffusion_never_loses_blocks(seed, nranks):
+    import random
+
+    forest = make_uniform_forest(GEOM, nranks, level=1)
+    rng = random.Random(seed)
+    for b in forest.all_blocks():
+        b.weight = rng.choice([1.0, 2.0])
+    total_blocks = forest.num_blocks()
+    total_weight = sum(b.weight for b in forest.all_blocks())
+    comm = Comm(nranks)
+    pipe = AMRPipeline(
+        balancer=DiffusionBalancer(mode="push", flow_iterations=15, max_main_iterations=15),
+        registry=BlockDataRegistry.trivial(),
+        weight_fn=lambda old, kind, nb: old.weight,
+    )
+    forest, _ = pipe.run_cycle(forest, comm, None, force_rebalance=True)
+    assert forest.num_blocks() == total_blocks
+    assert abs(sum(b.weight for b in forest.all_blocks()) - total_weight) < 1e-9

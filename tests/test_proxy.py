@@ -1,0 +1,89 @@
+"""Proxy data structure (§2.3): topology, bilateral links, migration (§2.4)."""
+
+import random
+
+from repro.core import Comm, make_uniform_forest
+from repro.core.blockid import children_ids, parent_id
+from repro.core.forest import build_adjacency
+from repro.core.proxy import build_proxy, migrate_proxy_blocks
+from repro.core.refine import mark_and_balance_targets
+
+from conftest import make_random_marks
+
+
+def _build(geom, nranks, seed):
+    forest = make_uniform_forest(geom, nranks, level=1)
+    comm = Comm(nranks)
+    changed, ghost = mark_and_balance_targets(
+        forest, comm, make_random_marks(seed)
+    )
+    proxy = build_proxy(forest, comm, ghost)
+    return forest, proxy, comm
+
+
+def test_proxy_topology_matches_adjacency_oracle(geom):
+    for seed in (0, 1, 2):
+        forest, proxy, _ = _build(geom, 4, seed)
+        # the proxy must be a valid forest: cover + 2:1 + exact adjacency
+        proxy.check_all()
+
+
+def test_bilateral_links(geom):
+    forest, proxy, _ = _build(geom, 4, 3)
+    proxy_by_id = {b.bid: b for b in proxy.all_blocks()}
+    for blk in forest.all_blocks():
+        t = blk.target_level
+        if t == blk.level + 1:
+            assert len(blk.target_ranks) == 8
+            for o, ch in enumerate(children_ids(blk.bid)):
+                pb = proxy_by_id[ch]
+                assert pb.owner == blk.target_ranks[o]
+                assert pb.source_ranks == [blk.owner]
+        elif t == blk.level:
+            pb = proxy_by_id[blk.bid]
+            assert pb.owner == blk.target_ranks[0]
+            assert pb.source_ranks == [blk.owner]
+        else:
+            pb = proxy_by_id[parent_id(blk.bid)]
+            assert pb.owner == blk.target_ranks[0]
+            assert len(pb.source_ranks) == 8
+
+
+def test_proxy_migration_preserves_links_and_adjacency(geom):
+    forest, proxy, comm = _build(geom, 4, 4)
+    rng = random.Random(0)
+    # random assignment of every proxy block
+    assignments = []
+    for r in range(4):
+        assignments.append({bid: rng.randrange(4) for bid in proxy.local_blocks(r)})
+    n_before = proxy.num_blocks()
+    moved = migrate_proxy_blocks(proxy, forest, comm, assignments)
+    assert proxy.num_blocks() == n_before  # conservation
+    proxy.check_all()  # owners in neighbor maps must be fresh
+    # bilateral links: actual target_ranks point at the proxy owners
+    proxy_by_id = {b.bid: b for b in proxy.all_blocks()}
+    for blk in forest.all_blocks():
+        if blk.target_level == blk.level + 1:
+            for o, ch in enumerate(children_ids(blk.bid)):
+                assert blk.target_ranks[o] == proxy_by_id[ch].owner
+        elif blk.target_level == blk.level:
+            assert blk.target_ranks[0] == proxy_by_id[blk.bid].owner
+        else:
+            assert blk.target_ranks[0] == proxy_by_id[parent_id(blk.bid)].owner
+    # a second migration round still works (stale-owner forwarding)
+    assignments2 = []
+    for r in range(4):
+        assignments2.append({bid: rng.randrange(4) for bid in proxy.local_blocks(r)})
+    migrate_proxy_blocks(proxy, forest, comm, assignments2)
+    proxy.check_all()
+
+
+def test_proxy_creation_is_neighbor_local(geom):
+    """§2.3: proxy creation must not use collectives at all."""
+    forest = make_uniform_forest(geom, 4, level=1)
+    comm = Comm(4)
+    changed, ghost = mark_and_balance_targets(forest, comm, make_random_marks(7))
+    before = comm.stats.allreduce_calls + comm.stats.allgather_calls
+    build_proxy(forest, comm, ghost)
+    after = comm.stats.allreduce_calls + comm.stats.allgather_calls
+    assert before == after

@@ -1,0 +1,98 @@
+"""Distributed marking + 2:1 balance (paper §2.2)."""
+
+from repro.core import Comm, make_uniform_forest
+from repro.core.blockid import children_ids
+from repro.core.refine import mark_and_balance_targets
+
+
+def test_no_marks_early_exit(geom):
+    forest = make_uniform_forest(geom, 4, level=1)
+    comm = Comm(4)
+    changed, _ = mark_and_balance_targets(forest, comm, None)
+    assert not changed
+    assert all(b.target_level == b.level for b in forest.all_blocks())
+    # early exit costs exactly one reduction (plus the ghost exchange)
+    assert comm.stats.allreduce_calls == 1
+
+
+def test_refine_marks_are_always_accepted(geom):
+    forest = make_uniform_forest(geom, 4, level=1)
+    comm = Comm(4)
+    victim = min(b.bid for b in forest.all_blocks())
+
+    changed, _ = mark_and_balance_targets(
+        forest, comm, lambda r, blocks: {victim: geom.level_of(victim) + 1} if victim in blocks else {}
+    )
+    assert changed
+    by_id = {b.bid: b for b in forest.all_blocks()}
+    assert by_id[victim].target_level == by_id[victim].level + 1
+
+
+def test_forced_splits_maintain_two_one(geom):
+    """Refining one block twice (two cycles) must force neighbors to split."""
+    forest = make_uniform_forest(geom, 2, level=0)
+    comm = Comm(2)
+    # refine one root block; neighbors stay -> levels 0/1 everywhere: fine
+    target = min(b.bid for b in forest.all_blocks())
+    from repro.core import AMRPipeline, BlockDataRegistry, SFCBalancer
+
+    pipe = AMRPipeline(balancer=SFCBalancer(), registry=BlockDataRegistry.trivial())
+    forest, _ = pipe.run_cycle(
+        forest, comm, lambda r, blocks: {target: 1} if target in blocks else {}
+    )
+    forest.check_all()
+    # now refine one of the new level-1 blocks -> its level-0 neighbors
+    # violate 2:1 and must be forced to split
+    lvl1 = [b.bid for b in forest.all_blocks() if b.level == 1]
+    inner = min(lvl1)
+    forest, _ = pipe.run_cycle(
+        forest, comm, lambda r, blocks: {inner: 2} if inner in blocks else {}
+    )
+    forest.check_all()  # includes 2:1 check
+    assert max(b.level for b in forest.all_blocks()) == 2
+
+
+def test_coarsening_requires_all_siblings(geom):
+    forest = make_uniform_forest(geom, 2, level=1)
+    comm = Comm(2)
+    # mark only 7 of 8 siblings of one parent for coarsening -> no merge
+    root = geom.root_id(0)
+    sibs = children_ids(root)
+    marks = {bid: 0 for bid in sibs[:7]}
+    changed, _ = mark_and_balance_targets(
+        forest, comm, lambda r, blocks: {b: t for b, t in marks.items() if b in blocks}
+    )
+    assert not changed  # nothing was accepted
+    by_id = {b.bid: b for b in forest.all_blocks()}
+    for bid in sibs:
+        assert by_id[bid].target_level == 1
+
+
+def test_coarsening_accepted_when_group_complete(geom):
+    forest = make_uniform_forest(geom, 2, level=1)
+    comm = Comm(2)
+    root = geom.root_id(0)
+    sibs = children_ids(root)
+    marks = {bid: 0 for bid in sibs}
+    changed, _ = mark_and_balance_targets(
+        forest, comm, lambda r, blocks: {b: t for b, t in marks.items() if b in blocks}
+    )
+    assert changed
+    by_id = {b.bid: b for b in forest.all_blocks()}
+    for bid in sibs:
+        assert by_id[bid].target_level == 0
+
+
+def test_rounds_bounded_by_levels(geom):
+    """§2.2: the iteration count depends on the depth, not the rank count."""
+    rounds = {}
+    for nranks in (2, 8):
+        forest = make_uniform_forest(geom, nranks, level=1)
+        comm = Comm(nranks)
+        victim = min(b.bid for b in forest.all_blocks())
+        mark_and_balance_targets(
+            forest, comm, lambda r, blocks: {victim: 2} if victim in blocks else {}
+        )
+        rounds[nranks] = comm.stats.exchange_rounds  # p2p supersteps only
+    # neighbor-exchange rounds must not grow with rank count
+    assert rounds[8] <= rounds[2] + 2

@@ -1,0 +1,86 @@
+"""Sharding spec construction for every assigned architecture."""
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, all_arch_ids, cells_for, get_config
+from repro.models.zoo import DistContext, build_model, init_cache
+from repro.sharding.specs import (
+    batch_pspecs,
+    cache_pspecs,
+    opt_state_pspecs,
+    param_pspecs,
+)
+from repro.train.optimizer import adamw_init
+
+AXES = ("data", "model")
+SIZES = {"data": 16, "model": 16}
+
+
+def _check_divisible(spec_tree, shape_tree):
+    def check(spec, leaf):
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            prod = 1
+            for n in names:
+                prod *= SIZES.get(n, 1)
+            assert dim % prod == 0, (spec, leaf.shape)
+
+    jax.tree.map(check, spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_param_and_opt_specs_all_archs():
+    for arch in all_arch_ids():
+        cfg = get_config(arch)
+        model = build_model(cfg, DistContext())
+        p_sds = jax.eval_shape(lambda m=model: m.init(jax.random.PRNGKey(0), jnp.bfloat16))
+        specs = param_pspecs(cfg, p_sds, AXES, SIZES)
+        assert jax.tree.structure(specs) == jax.tree.structure(p_sds)
+        _check_divisible(specs, p_sds)
+        # big matrices must actually be sharded on the model axis
+        flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+        sharded = [s for _p, s in flat if "model" in str(s)]
+        assert len(sharded) > 0, arch
+        opt_sds = jax.eval_shape(adamw_init, p_sds)
+        ospecs = opt_state_pspecs(cfg, opt_sds, AXES, SIZES)
+        _check_divisible(
+            jax.tree.map(lambda x: x, ospecs, is_leaf=lambda x: isinstance(x, P)),
+            opt_sds,
+        )
+
+
+def test_cache_specs_all_cells():
+    for arch in all_arch_ids():
+        cfg = get_config(arch)
+        for shape in cells_for(cfg):
+            if shape.kind != "decode":
+                continue
+            c_sds = jax.eval_shape(
+                lambda: init_cache(cfg, shape.global_batch, shape.seq_len, jnp.bfloat16)
+            )
+            specs = cache_pspecs(cfg, shape, c_sds, AXES, SIZES)
+            assert jax.tree.structure(specs) == jax.tree.structure(c_sds)
+            _check_divisible(specs, c_sds)
+            if shape.global_batch == 1:
+                # long-context: the KV sequence dim must be sharded on data
+                flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+                kv = [s for p, s in flat if p and getattr(p[-1], "key", "") == "k"]
+                if kv:
+                    assert "data" in str(kv[0]), (arch, kv[0])
+
+
+def test_batch_specs():
+    for arch in all_arch_ids():
+        cfg = get_config(arch)
+        for shape in cells_for(cfg):
+            specs = batch_pspecs(cfg, shape, AXES)
+            assert "tokens" in specs
+
+
+def test_wsc_is_identity_without_axes():
+    dist = DistContext()
+    x = jnp.ones((4, 4))
+    assert dist.wsc(x, "b.") is x

@@ -1,0 +1,116 @@
+"""End-to-end behaviour tests for the paper's system.
+
+These reproduce the *shape* of the paper's headline behaviours at laptop
+scale: the synthetic benchmark scenario (§5.1.1), the scaling argument
+(diffusion O(1) vs SFC Θ(N) per-rank bytes), and the full AMR + LBM loop.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AMRPipeline,
+    BlockDataRegistry,
+    Comm,
+    DiffusionBalancer,
+    ForestGeometry,
+    SFCBalancer,
+    make_uniform_forest,
+)
+from repro.lbm import AMRLBM, LidDrivenCavityConfig
+
+
+def _paper_benchmark_marks(geom, forest):
+    """§5.1.1-style stress: coarsen all finest blocks, refine an equal
+    amount of coarser neighbors -> most cells change size."""
+    levels = forest.levels_in_use()
+    finest = max(levels)
+
+    def mark(rank, blocks):
+        out = {}
+        for bid, blk in blocks.items():
+            if blk.level == finest:
+                out[bid] = blk.level - 1
+            elif blk.level == finest - 1:
+                out[bid] = blk.level + 1
+        return out
+
+    return mark
+
+
+@pytest.mark.parametrize(
+    "balancer_name,balancer",
+    [
+        ("morton", SFCBalancer(order="morton")),
+        ("hilbert", SFCBalancer(order="hilbert")),
+        ("diffusion", DiffusionBalancer(mode="pushpull", flow_iterations=5, max_main_iterations=30)),
+    ],
+)
+def test_full_amr_stress_cycle(balancer_name, balancer):
+    """72%-of-cells-change-size style repartitioning stress (§5.1.1)."""
+    geom = ForestGeometry(root_grid=(2, 2, 2), max_level=8)
+    nranks = 8
+    forest = make_uniform_forest(geom, nranks, level=1)
+    comm = Comm(nranks)
+    pipe = AMRPipeline(balancer=balancer, registry=BlockDataRegistry.trivial())
+    # create a two-level structure first
+    some = sorted(b.bid for b in forest.all_blocks())[:16]
+    forest, _ = pipe.run_cycle(
+        forest, comm, lambda r, blocks: {b: geom.level_of(b) + 1 for b in some if b in blocks}
+    )
+    forest.check_all()
+    n_before = forest.num_blocks()
+    # now the paper's stress marks
+    forest, report = pipe.run_cycle(forest, comm, _paper_benchmark_marks(geom, forest))
+    forest.check_all()
+    assert report.executed
+    for lvl in forest.levels_in_use():
+        counts = forest.blocks_per_rank(lvl)
+        assert max(counts) <= math.ceil(sum(counts) / nranks) + (
+            0 if balancer_name != "diffusion" else 2
+        )
+
+
+def test_scaling_argument_diffusion_vs_sfc():
+    """The paper's central claim: diffusion per-rank collective bytes stay
+    O(1) while SFC per-rank bytes grow Θ(N)."""
+    # WEAK scaling: blocks per rank constant, domain grows with ranks
+    sfc_bytes, diff_bytes = {}, {}
+    for nranks, roots in ((8, (2, 2, 2)), (32, (4, 4, 2))):
+        geom = ForestGeometry(root_grid=roots, max_level=8)
+        for name, bal, store in (
+            ("sfc", SFCBalancer(per_level=True), sfc_bytes),
+            ("diff", DiffusionBalancer(mode="pushpull", flow_iterations=5, max_main_iterations=10), diff_bytes),
+        ):
+            forest = make_uniform_forest(geom, nranks, level=1)
+            comm = Comm(nranks)
+            pipe = AMRPipeline(balancer=bal, registry=BlockDataRegistry.trivial())
+            forest, _ = pipe.run_cycle(forest, comm, None, force_rebalance=True)
+            store[nranks] = comm.stats.collective_bytes_per_rank
+    assert sfc_bytes[32] > sfc_bytes[8] * 2.5  # Θ(N) growth
+    assert diff_bytes[32] <= diff_bytes[8] * 2.0  # bounded (iterations only)
+
+
+def test_lbm_amr_end_to_end():
+    cfg = LidDrivenCavityConfig(
+        root_grid=(2, 2, 2),
+        cells_per_block=(8, 8, 8),
+        nranks=4,
+        omega=1.5,
+        u_lid=(0.08, 0.0, 0.0),
+        max_level=1,
+        refine_upper=0.03,
+        refine_lower=0.004,
+        balancer="diffusion-pushpull",
+    )
+    sim = AMRLBM(cfg)
+    m0 = sim.total_mass()
+    sim.run(coarse_steps=4, amr_interval=2)
+    sim.forest.check_all()
+    assert sim.amr_cycles >= 1
+    assert np.isfinite(sim.max_velocity())
+    assert abs(sim.total_mass() - m0) / m0 < 5e-3
+    # flow actually developed
+    assert sim.max_velocity() > 1e-4
