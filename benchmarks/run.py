@@ -13,6 +13,9 @@ Mapping to the paper:
   migration_volume   Figs 8/9/11/13 data-migration stage: bytes moved per rank
   lbm_mlups          kernel throughput (MLUPS, interpret-mode lower bound +
                      pure-jnp reference path)
+  stepping           arena (persistent LevelArena buffers) vs per-substep
+                     restacking: blocks/s of the full substepping loop,
+                     appended to the BENCH_stepping.json trajectory
   roofline           §Roofline: renders the dry-run artifact table
 """
 
@@ -27,6 +30,12 @@ import numpy as np
 
 def _csv(name: str, metric: str, value) -> None:
     print(f"{name},{metric},{value}")
+
+
+def _timed(fn, *args) -> float:
+    t0 = time.perf_counter()
+    fn(*args)
+    return time.perf_counter() - t0
 
 
 # -----------------------------------------------------------------------------
@@ -183,6 +192,77 @@ def lbm_mlups(quick: bool = False) -> None:
         _csv(f"lbm_mlups/{backend}", f"cells{B * n**3}", round(mlups, 3))
 
 
+def stepping(quick: bool = False) -> None:
+    """Arena stepping vs per-substep restacking (the seed behavior) on the
+    lid-driven-cavity config: blocks/s throughput of the full substepping
+    loop (halo exchange + fused kernel), appended to the BENCH_stepping.json
+    trajectory."""
+    import json
+    from pathlib import Path
+
+    from repro.lbm import AMRLBM, LidDrivenCavityConfig
+
+    coarse = 2 if quick else 4
+    cells = (8, 8, 8) if quick else (16, 16, 16)
+    results: dict[str, float] = {}
+    for mode in ("restack", "arena"):
+        cfg = LidDrivenCavityConfig(
+            root_grid=(2, 2, 2),
+            cells_per_block=cells,
+            nranks=4,
+            omega=1.5,
+            u_lid=(0.08, 0.0, 0.0),
+            max_level=1,
+            refine_upper=0.03,
+            refine_lower=0.004,
+            stepping_mode=mode,
+            kernel_backend="ref",  # interpret-mode pallas would mask the data-path cost
+        )
+        sim = AMRLBM(cfg)
+        sim.advance(1)  # warm up the L0 stepper jit
+        sim.adapt()  # develop the two-level structure
+        sim.advance(1)  # warm up the L1 stepper jit
+        # block-steps per coarse step: level-l blocks substep 2^l times
+        work = sum(
+            (2**l) * sum(1 for b in sim.forest.all_blocks() if b.level == l)
+            for l in sim.forest.levels_in_use()
+        )
+        # best-of-N: the host is shared, so a single timing is noise-bound
+        dt = min(
+            _timed(sim.advance, coarse) for _ in range(2 if quick else 3)
+        )
+        results[mode] = coarse * work / dt
+        _csv(f"stepping/{mode}", "blocks_per_s", round(results[mode], 1))
+        _csv(f"stepping/{mode}", "wall_s", round(dt, 4))
+    speedup = results["arena"] / results["restack"]
+    _csv("stepping", "arena_speedup", round(speedup, 3))
+    traj_path = Path(__file__).resolve().parents[1] / "BENCH_stepping.json"
+    try:
+        traj = json.loads(traj_path.read_text())
+        if not isinstance(traj, list):
+            raise ValueError("trajectory is not a list")
+    except OSError:  # no trajectory yet
+        traj = []
+    except ValueError:  # corrupt/partial/wrong shape: preserve aside, don't wipe
+        bad = traj_path.with_suffix(".json.corrupt")
+        traj_path.replace(bad)
+        _csv("stepping", "trajectory_warning", f"unreadable, moved to {bad.name}")
+        traj = []
+    traj.append(
+        {
+            "scenario": "lid-driven-cavity",
+            "cells_per_block": list(cells),  # quick/full runs differ ~8x in blocks/s
+            "quick": quick,
+            "coarse_steps": coarse,
+            "blocks_per_s": {k: round(v, 1) for k, v in results.items()},
+            "arena_speedup": round(speedup, 3),
+        }
+    )
+    tmp = traj_path.with_suffix(".json.tmp")
+    tmp.write_text(json.dumps(traj, indent=2) + "\n")
+    tmp.replace(traj_path)  # atomic: a killed run can't truncate the trajectory
+
+
 def roofline(quick: bool = False) -> None:
     """Render the §Roofline table from the dry-run artifacts."""
     import json
@@ -212,6 +292,7 @@ ALL = {
     "metadata_sync": metadata_sync,
     "migration_volume": migration_volume,
     "lbm_mlups": lbm_mlups,
+    "stepping": stepping,
     "roofline": roofline,
 }
 

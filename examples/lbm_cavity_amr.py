@@ -1,10 +1,12 @@
 """End-to-end driver: 3D lid-driven cavity with dynamic AMR (paper §5.1.1).
 
 Runs the LBM (D3Q19, TRT) with the velocity-gradient refinement criterion,
-diffusion load balancing, and per-level time stepping. Prints per-epoch
-diagnostics including the AMR pipeline stage costs.
+diffusion load balancing, and per-level time stepping on persistent
+LevelArena buffers (use ``--mode restack`` for the legacy per-substep
+restacking path). Prints per-epoch diagnostics including the AMR pipeline
+stage costs.
 
-    PYTHONPATH=src python examples/lbm_cavity_amr.py [--steps 12]
+    PYTHONPATH=src python examples/lbm_cavity_amr.py [--steps 12] [--mode arena]
 """
 
 import argparse
@@ -16,6 +18,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=12)
     ap.add_argument("--amr-interval", type=int, default=3)
+    ap.add_argument("--mode", choices=("arena", "restack"), default="arena")
     args = ap.parse_args()
 
     cfg = LidDrivenCavityConfig(
@@ -29,10 +32,12 @@ def main() -> None:
         refine_upper=0.04,
         refine_lower=0.006,
         balancer="diffusion-pushpull",
+        stepping_mode=args.mode,
     )
     sim = AMRLBM(cfg)
     print(f"initial: {sim.forest.num_blocks()} blocks "
-          f"({sim.num_fluid_cells()} fluid cells), mass {sim.total_mass():.2f}")
+          f"({sim.num_fluid_cells()} fluid cells), mass {sim.total_mass():.2f}, "
+          f"stepping={args.mode}")
     for epoch in range(args.steps // args.amr_interval):
         sim.advance(args.amr_interval)
         report = sim.adapt()

@@ -12,9 +12,10 @@ import numpy as np
 
 from repro.core import (
     AMRPipeline,
-    BlockDataRegistry,
     Comm,
     DiffusionBalancer,
+    FieldRegistry,
+    FieldSpec,
     ForestGeometry,
     make_uniform_forest,
 )
@@ -26,12 +27,21 @@ def main() -> None:
     geom = ForestGeometry(root_grid=(2, 2, 2), max_level=8)
     nranks = 8
     forest = make_uniform_forest(geom, nranks, level=1)
+
+    # one typed declaration drives snapshot/restore AND disk checkpointing
+    # (FieldRegistry derives the §2.5 callbacks; BlockDataRegistry.trivial()
+    #  remains available for truly opaque payloads)
+    reg = FieldRegistry(
+        cells=(4, 4, 4),
+        fields=(FieldSpec("payload", dtype=np.float32, refine="interpolate", coarsen="restrict"),),
+    )
     rng = np.random.default_rng(0)
     for b in forest.all_blocks():
-        b.data["payload"] = rng.standard_normal(64).astype(np.float32)
+        arr = reg.alloc("payload")
+        arr[...] = rng.standard_normal(arr.shape)
+        b.data["payload"] = arr
     checksum = sum(float(b.data["payload"].sum()) for b in forest.all_blocks())
 
-    reg = BlockDataRegistry.trivial()
     pipe = AMRPipeline(
         balancer=DiffusionBalancer(mode="pushpull", flow_iterations=5, max_main_iterations=20),
         registry=reg,

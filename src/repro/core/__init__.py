@@ -13,6 +13,7 @@ from .forest import Block, BlockForest, make_forest_from_levels, make_uniform_fo
 from .refine import mark_and_balance_targets
 from .proxy import build_proxy, migrate_proxy_blocks
 from .migration import BlockDataItem, BlockDataRegistry, migrate_data
+from .fields import FieldRegistry, FieldSpec, LevelArena
 from .pipeline import AMRPipeline, CycleReport
 from .balancing import DiffusionBalancer, SFCBalancer
 
@@ -30,6 +31,9 @@ __all__ = [
     "migrate_proxy_blocks",
     "BlockDataItem",
     "BlockDataRegistry",
+    "FieldSpec",
+    "FieldRegistry",
+    "LevelArena",
     "migrate_data",
     "AMRPipeline",
     "CycleReport",

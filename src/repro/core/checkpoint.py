@@ -41,12 +41,11 @@ def save_checkpoint(
     }
     (path / "topology.json").write_text(json.dumps(topo))
     for r in range(forest.nranks):
-        payload = {}
-        for bid, blk in forest.local_blocks(r).items():
-            payload[bid] = {
-                name: item.serialize_move(blk.data.get(name), blk)
-                for name, item in registry.items.items()
-            }
+        payload = {
+            # no owned copies needed: pickle.dump snapshots the arrays itself
+            bid: registry.encode_block(blk, copy=False)
+            for bid, blk in forest.local_blocks(r).items()
+        }
         with open(path / f"rank_{r:06d}.pkl", "wb") as f:
             pickle.dump(payload, f)
 
@@ -78,10 +77,7 @@ def load_checkpoint(
     for i, e in enumerate(entries):
         owner = min(nranks - 1, i * nranks // max(1, n))
         blk = Block(bid=e["bid"], level=e["level"], owner=owner, weight=e["weight"])
-        blk.data = {
-            name: item.deserialize_move(payloads[e["bid"]].get(name), blk)
-            for name, item in registry.items.items()
-        }
+        blk.data = registry.decode_block(payloads[e["bid"]], blk)
         blocks.append(blk)
     build_adjacency(geom, blocks)
     for b in blocks:

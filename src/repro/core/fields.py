@@ -1,0 +1,377 @@
+"""Typed block-field API: one declaration drives the whole framework.
+
+The paper's blocks "support the storage of arbitrary data" via user-registered
+serialization callbacks (§2.5). The raw mechanism — six callbacks per item
+(:class:`~repro.core.migration.BlockDataItem`) — is maximally general but
+forces every physics module to hand-write the same volumetric split/merge
+boilerplate, and gives the framework no type information to build fast data
+paths from. This module layers a *typed* field API on top:
+
+* :class:`FieldSpec` — one declaration per physics field: name, dtype,
+  per-cell component shape, ghost width, and a declarative refine/coarsen
+  policy (``copy | inject | interpolate`` x ``copy | restrict | max`` or
+  custom functions);
+* :class:`FieldRegistry` — a :class:`BlockDataRegistry` subclass that
+  **derives** the six migration callbacks, checkpoint encode/decode, and
+  resilience snapshot/restore from the declarations. Untyped
+  ``BlockDataRegistry`` (e.g. :meth:`BlockDataRegistry.trivial`) keeps
+  working everywhere as the compatibility shim for meshless/opaque data;
+* :class:`LevelArena` — persistent per-level struct-of-arrays storage: one
+  contiguous ``(B, *field_shape)`` buffer per (level, field) with a
+  bid -> slot index maintained across migration/refine/coarsen. Every
+  ``Block.data[name]`` entry is a zero-copy view into its arena buffer, so
+  ghost exchange and diagnostics keep their per-block interface while the
+  stepping loop hands whole buffers to the kernels — no per-substep
+  restacking.
+
+Registering a new physics field is one line::
+
+    reg = FieldRegistry(cells=(16, 16, 16))
+    reg.add(FieldSpec("temperature", dtype=np.float32,
+                      refine="interpolate", coarsen="restrict"))
+
+and migration, checkpoint/restart, buddy resilience, halo exchange, and the
+arena data plane all pick it up with no further code.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Iterable
+
+import numpy as np
+
+from .forest import Block, BlockForest
+from .migration import BlockDataItem, BlockDataRegistry
+
+__all__ = [
+    "FieldSpec",
+    "FieldRegistry",
+    "LevelArena",
+    "octant_slices",
+    "coarsen2",
+    "refine2",
+]
+
+
+# -- volumetric resampling primitives (paper §3.3, [54]/[16]) -----------------
+
+
+def _interior_slice(g: int) -> slice:
+    return slice(g, -g) if g else slice(None)  # slice(0, -0) would be empty
+
+
+def octant_slices(o: int, n: tuple[int, int, int], g: int) -> tuple[slice, slice, slice]:
+    """Interior slices of octant ``o`` of a ghosted (nx+2g, ny+2g, nz+2g) array."""
+    ox, oy, oz = o & 1, (o >> 1) & 1, (o >> 2) & 1
+    nx, ny, nz = n
+    return (
+        slice(g + ox * nx // 2, g + (ox + 1) * nx // 2),
+        slice(g + oy * ny // 2, g + (oy + 1) * ny // 2),
+        slice(g + oz * nz // 2, g + (oz + 1) * nz // 2),
+    )
+
+
+def _group2(a: np.ndarray) -> np.ndarray:
+    """View the last three axes as 2x2x2 groups: (..., x/2, 2, y/2, 2, z/2, 2)."""
+    s = a.shape
+    return a.reshape(*s[:-3], s[-3] // 2, 2, s[-2] // 2, 2, s[-1] // 2, 2)
+
+
+def coarsen2(a: np.ndarray) -> np.ndarray:
+    """Average 2x2x2 groups over the last three axes (volumetric restrict)."""
+    return _group2(a).mean(axis=(-5, -3, -1))
+
+
+def refine2(a: np.ndarray) -> np.ndarray:
+    """Replicate each cell into 2x2x2 over the last three axes (volumetric split)."""
+    for ax in (-3, -2, -1):
+        a = np.repeat(a, 2, axis=ax)
+    return a
+
+
+def _coarsen_max(a: np.ndarray) -> np.ndarray:
+    """2x2x2 max over the last three axes (categorical merge: 'prefer walls')."""
+    return _group2(a).max(axis=(-5, -3, -1))
+
+
+_REFINE_FNS: dict[str, Callable[[np.ndarray], np.ndarray]] = {
+    # both replicate cell values onto the 2x finer grid; they differ in intent
+    # (and are allowed to diverge, e.g. to trilinear interpolation):
+    "interpolate": refine2,  # continuous data; conservative w.r.t. cell averages
+    "inject": refine2,  # categorical data (piecewise-constant injection)
+}
+_COARSEN_FNS: dict[str, Callable[[np.ndarray], np.ndarray]] = {
+    "restrict": coarsen2,  # mean over the 2x2x2 octet (mass-conservative)
+    "max": _coarsen_max,  # categorical reduce
+}
+
+
+@dataclass(frozen=True)
+class FieldSpec:
+    """Declaration of one typed per-block mesh field.
+
+    The stored array has shape ``(*shape, nx+2g, ny+2g, nz+2g)``: ``shape``
+    leading per-cell component axes (e.g. ``(Q,)`` for PDFs, ``()`` for a
+    scalar), then the three ghosted spatial axes.
+
+    ``refine`` governs the split data path (coarse parent -> 8 fine children)
+    and ``coarsen`` the merge path (8 fine children -> coarse parent):
+
+    * ``refine="interpolate" | "inject"`` — the *unmodified* coarse octant is
+      serialized on the sender; the prolongation onto the finer grid happens
+      on the receiver during deserialization (the paper's §2.5/§3.3 memory
+      argument: no 8x reserve on the source). A custom callable maps the
+      coarse octant interior to the full fine interior.
+    * ``coarsen="restrict" | "max"`` — restriction happens on the *sender*
+      before serialization; the receiver only assembles the eight coarse
+      octant payloads. A custom callable maps the fine interior to one
+      coarse octant payload.
+    * ``refine="copy"`` / ``coarsen="copy"`` — opaque pass-through: every
+      child receives the full parent array; a merged parent takes octant 0's
+      array (for per-block metadata that has no mesh semantics).
+    """
+
+    name: str
+    dtype: Any = np.float32
+    shape: tuple[int, ...] = ()
+    ghost: int = 1
+    refine: str | Callable[[np.ndarray], np.ndarray] = "interpolate"
+    coarsen: str | Callable[[np.ndarray], np.ndarray] = "restrict"
+
+    def block_shape(self, cells: tuple[int, int, int]) -> tuple[int, ...]:
+        g2 = 2 * self.ghost
+        return (*self.shape, cells[0] + g2, cells[1] + g2, cells[2] + g2)
+
+    def _refine_fn(self) -> Callable[[np.ndarray], np.ndarray] | None:
+        if self.refine == "copy":
+            return None
+        if callable(self.refine):
+            return self.refine
+        return _REFINE_FNS[self.refine]
+
+    def _coarsen_fn(self) -> Callable[[np.ndarray], np.ndarray] | None:
+        if self.coarsen == "copy":
+            return None
+        if callable(self.coarsen):
+            return self.coarsen
+        return _COARSEN_FNS[self.coarsen]
+
+
+def _derive_item(spec: FieldSpec, cells: tuple[int, int, int]) -> BlockDataItem:
+    """Derive the six §2.5 serialization callbacks from one declaration."""
+    g = spec.ghost
+    full = spec.block_shape(cells)
+    refine_fn = spec._refine_fn()
+    coarsen_fn = spec._coarsen_fn()
+    interior = (Ellipsis,) + (_interior_slice(g),) * 3
+
+    def ser_move(d: Any, _blk: Block) -> Any:
+        return d
+
+    def des_move(p: Any, _blk: Block) -> Any:
+        return p
+
+    def ser_split(d: np.ndarray, _blk: Block, o: int) -> np.ndarray:
+        if refine_fn is None:  # copy policy: full array to every child
+            return d
+        sx, sy, sz = octant_slices(o, cells, g)
+        return np.ascontiguousarray(d[..., sx, sy, sz])  # unmodified coarse data
+
+    def des_split(p: np.ndarray, _blk: Block) -> np.ndarray:
+        if refine_fn is None:
+            return np.array(p) if isinstance(p, np.ndarray) else p
+        out = np.zeros(full, dtype=spec.dtype)
+        out[interior] = refine_fn(p)  # prolong on the receiver (§3.3)
+        return out
+
+    def ser_merge(d: np.ndarray, _blk: Block) -> np.ndarray:
+        if coarsen_fn is None:
+            return d
+        return coarsen_fn(d[interior]).astype(spec.dtype)  # restrict on the sender
+
+    def des_merge(parts: dict[int, np.ndarray], _blk: Block) -> np.ndarray:
+        if coarsen_fn is None:
+            p = parts[0]
+            return np.array(p) if isinstance(p, np.ndarray) else p
+        out = np.zeros(full, dtype=spec.dtype)
+        for o, payload in parts.items():
+            sx, sy, sz = octant_slices(o, cells, g)
+            out[..., sx, sy, sz] = payload
+        return out
+
+    return BlockDataItem(
+        serialize_move=ser_move,
+        deserialize_move=des_move,
+        serialize_split=ser_split,
+        deserialize_split=des_split,
+        serialize_merge=ser_merge,
+        deserialize_merge=des_merge,
+    )
+
+
+class FieldRegistry(BlockDataRegistry):
+    """Typed registry: :class:`FieldSpec` declarations with derived callbacks.
+
+    A drop-in :class:`BlockDataRegistry` — migration, checkpoint, resilience,
+    and the AMR pipeline consume it unchanged through ``items`` /
+    ``encode_block`` / ``decode_block`` — plus the typed surface
+    (``fields``, ``alloc``, ``block_shape``) that the arena data plane and
+    halo exchange build on.
+    """
+
+    def __init__(
+        self, cells: tuple[int, int, int], fields: Iterable[FieldSpec] = ()
+    ) -> None:
+        super().__init__()
+        self.cells = tuple(int(c) for c in cells)
+        for n in self.cells:
+            assert n % 2 == 0, "cells per block must be even (octant split)"
+        self.fields: dict[str, FieldSpec] = {}
+        for spec in fields:
+            self.add(spec)
+
+    def add(self, spec: FieldSpec) -> FieldSpec:
+        """Register one field; all framework callbacks are derived here."""
+        assert spec.name not in self.fields, f"field {spec.name!r} already registered"
+        self.fields[spec.name] = spec
+        self.register(spec.name, _derive_item(spec, self.cells))
+        return spec
+
+    def block_shape(self, name: str) -> tuple[int, ...]:
+        return self.fields[name].block_shape(self.cells)
+
+    def alloc(self, name: str) -> np.ndarray:
+        """A zeroed per-block array for field ``name`` (ghosted)."""
+        spec = self.fields[name]
+        return np.zeros(spec.block_shape(self.cells), dtype=spec.dtype)
+
+    def interior(self, name: str, arr: np.ndarray) -> np.ndarray:
+        s = _interior_slice(self.fields[name].ghost)
+        return arr[..., s, s, s]
+
+    # -- checkpoint / resilience hook (typed: validates on decode) -------------
+    # encode_block's snapshot copy semantics come from the base registry.
+    def decode_block(
+        self, payload: dict[str, Any], blk: Block, *, copy: bool = False
+    ) -> dict[str, Any]:
+        data = super().decode_block(payload, blk, copy=copy)
+        for name, spec in self.fields.items():
+            arr = data.get(name)
+            if arr is None:
+                continue
+            arr = np.asarray(arr)
+            want = spec.block_shape(self.cells)
+            if arr.shape != want:  # external input — must survive python -O
+                raise ValueError(
+                    f"field {name!r}: payload shape {arr.shape} != declared {want}"
+                )
+            data[name] = arr.astype(spec.dtype, copy=False)
+        return data
+
+
+class LevelArena:
+    """Persistent per-level struct-of-arrays storage for all mesh fields.
+
+    For every refinement level in use, the arena owns one contiguous
+    ``(B, *field_shape)`` buffer per registered field, where ``B`` is the
+    number of blocks on that level (across all simulated ranks — the data
+    plane is host-side, like the stepping loop it feeds). ``Block.data[name]``
+    is rebound to the block's zero-copy slice of the buffer, so all per-block
+    code (ghost exchange, criteria, diagnostics, migration serializers) keeps
+    working while kernels consume whole levels without restacking.
+
+    :meth:`adopt` is the single maintenance point: call it after any forest
+    topology change (AMR cycle, restart, resilience restore). It keeps the
+    bid -> slot index consistent with the forest and reuses buffers when a
+    level's block set is unchanged.
+    """
+
+    def __init__(self, registry: FieldRegistry) -> None:
+        self.registry = registry
+        self._bufs: dict[int, dict[str, np.ndarray]] = {}  # level -> field -> SoA
+        self._slots: dict[int, dict[int, int]] = {}  # level -> bid -> slot
+        self.version = 0  # bumped on every adopt (cache invalidation hook)
+
+    # -- data-plane access ------------------------------------------------------
+    def levels(self) -> list[int]:
+        return sorted(self._bufs)
+
+    def buffer(self, level: int, name: str) -> np.ndarray | None:
+        """The (B, *field_shape) SoA buffer for one level, or None."""
+        return self._bufs.get(level, {}).get(name)
+
+    def slots(self, level: int) -> dict[int, int]:
+        """bid -> slot index for one level (slot order is ascending bid)."""
+        return self._slots.get(level, {})
+
+    def slot_of(self, level: int, bid: int) -> int:
+        return self._slots[level][bid]
+
+    def num_blocks(self, level: int) -> int:
+        return len(self._slots.get(level, {}))
+
+    # -- maintenance ------------------------------------------------------------
+    def adopt(self, forest: BlockForest) -> None:
+        """(Re)pack block fields into per-level buffers and rebind views.
+
+        Blocks whose arrays already live in the right slot are left in place
+        (no copy); freshly materialized arrays (from migration deserialize,
+        checkpoint load, or block init) are copied into their slot once.
+        """
+        by_level: dict[int, list[Block]] = {}
+        for b in forest.all_blocks():
+            by_level.setdefault(b.level, []).append(b)
+        new_bufs: dict[int, dict[str, np.ndarray]] = {}
+        new_slots: dict[int, dict[int, int]] = {}
+        for level, blocks in by_level.items():
+            blocks.sort(key=lambda b: b.bid)
+            slots = {b.bid: i for i, b in enumerate(blocks)}
+            reuse = self._slots.get(level) == slots
+            bufs = dict(self._bufs.get(level, {})) if reuse else {}
+            for name, spec in self.registry.fields.items():
+                shape = (len(blocks), *spec.block_shape(self.registry.cells))
+                buf = bufs.get(name)
+                if buf is None or buf.shape != shape:
+                    buf = np.zeros(shape, dtype=spec.dtype)
+                for i, b in enumerate(blocks):
+                    src = b.data.get(name)
+                    view = buf[i]
+                    if src is not None and src.base is not buf:
+                        view[...] = src
+                    b.data[name] = view
+                bufs[name] = buf
+            new_bufs[level] = bufs
+            new_slots[level] = slots
+        self._bufs = new_bufs
+        self._slots = new_slots
+        self.version += 1
+
+    # -- invariants (tests / verification) --------------------------------------
+    def check_consistent(self, forest: BlockForest) -> None:
+        """Slot index and views agree with the forest topology exactly."""
+        by_level: dict[int, set[int]] = {}
+        for b in forest.all_blocks():
+            by_level.setdefault(b.level, set()).add(b.bid)
+        assert set(self._slots) == set(by_level), (
+            f"arena levels {sorted(self._slots)} != forest levels {sorted(by_level)}"
+        )
+        for level, bids in by_level.items():
+            slots = self._slots[level]
+            assert set(slots) == bids, f"L{level}: slot index out of sync"
+            assert sorted(slots.values()) == list(range(len(bids))), (
+                f"L{level}: slots not a dense permutation"
+            )
+        for b in forest.all_blocks():
+            slot = self._slots[b.level][b.bid]
+            for name in self.registry.fields:
+                buf = self._bufs[b.level][name]
+                view = b.data[name]
+                assert view.base is buf and view.shape == buf.shape[1:], (
+                    f"block {b.bid:#x} field {name!r} is not an arena view"
+                )
+                expect = buf[slot]
+                assert (
+                    view.__array_interface__["data"][0]
+                    == expect.__array_interface__["data"][0]
+                ), f"block {b.bid:#x} field {name!r} bound to the wrong slot"

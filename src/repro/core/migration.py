@@ -19,6 +19,7 @@ identical and extensible to arbitrary data.
 
 from __future__ import annotations
 
+import copy as _copy
 import pickle
 from dataclasses import dataclass
 from typing import Any, Callable
@@ -49,6 +50,16 @@ def payload_nbytes(obj: Any) -> int:
         return 64
 
 
+def _snapshot_copy(v: Any) -> Any:
+    """Owned copy of a payload value: arrays directly, containers recursively
+    (the §2.5 contract allows arbitrary nested data)."""
+    if isinstance(v, np.ndarray):
+        return np.array(v)
+    if isinstance(v, (dict, list, tuple)):
+        return _copy.deepcopy(v)
+    return v  # scalars/str/bytes are immutable; opaque objects stay opaque
+
+
 @dataclass
 class BlockDataItem:
     """The six serialization callbacks for one named block-data item."""
@@ -70,6 +81,37 @@ class BlockDataRegistry:
 
     def register(self, name: str, item: BlockDataItem) -> None:
         self.items[name] = item
+
+    # -- whole-block snapshot codec (checkpoint §4.1, resilience §4.2) ---------
+    # Both subsystems need exactly move semantics: serialize on the owner,
+    # deserialize wherever the block lands. Deriving them here keeps every
+    # registry — including the typed FieldRegistry, which overrides
+    # decode_block with shape/dtype validation — the single source of truth.
+    #
+    # Move callbacks commonly pass arrays by reference (right for migration,
+    # where the source forest is discarded). A long-lived in-memory snapshot
+    # must instead own its arrays — in-place stepping would silently mutate
+    # it — so ``copy=True`` copies every ndarray payload. Payloads that are
+    # immediately serialized (disk checkpoint) skip the copy.
+    def encode_block(self, blk: Block, *, copy: bool = True) -> dict[str, Any]:
+        payload = {
+            name: item.serialize_move(blk.data.get(name), blk)
+            for name, item in self.items.items()
+        }
+        if copy:
+            payload = {n: _snapshot_copy(v) for n, v in payload.items()}
+        return payload
+
+    def decode_block(
+        self, payload: dict[str, Any], blk: Block, *, copy: bool = False
+    ) -> dict[str, Any]:
+        data = {
+            name: item.deserialize_move(payload.get(name), blk)
+            for name, item in self.items.items()
+        }
+        if copy:  # restore paths: the snapshot must survive the restored run
+            data = {n: _snapshot_copy(v) for n, v in data.items()}
+        return data
 
     @staticmethod
     def trivial(name: str = "payload") -> "BlockDataRegistry":

@@ -60,11 +60,7 @@ class ResilienceManager:
                     "weight": blk.weight,
                     "neighbors": dict(blk.neighbors),
                 }
-                payload = {
-                    name: item.serialize_move(blk.data.get(name), blk)
-                    for name, item in self.registry.items.items()
-                }
-                state[bid] = (meta, payload)
+                state[bid] = (meta, self.registry.encode_block(blk))
             self.snapshots[r].own = state
             buddy = (r + N // 2) % N
             self.snapshots[r].buddy_rank = buddy
@@ -110,10 +106,9 @@ class ResilienceManager:
                     owner=owner_new,
                     weight=meta["weight"],
                 )
-                blk.data = {
-                    name: item.deserialize_move(payload.get(name), blk)
-                    for name, item in self.registry.items.items()
-                }
+                # copy: the snapshot must survive the restored run mutating
+                # its blocks in place (a second restore must stay valid)
+                blk.data = self.registry.decode_block(payload, blk, copy=True)
                 restored.insert(blk)
 
         for old in survivors:

@@ -12,12 +12,13 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ...lbm.lattice import D3Q19, Lattice
 from .lbm_collide import lbm_stream_collide_pallas
 from .ref import stream_collide_ref
 
-__all__ = ["fused_stream_collide", "make_stream_collide"]
+__all__ = ["fused_stream_collide", "make_stream_collide", "make_arena_stream_collide"]
 
 
 def make_stream_collide(
@@ -62,6 +63,41 @@ def make_stream_collide(
         raise ValueError(f"unknown backend {backend!r}")
 
     return step
+
+
+def make_arena_stream_collide(
+    *,
+    omega: float,
+    lattice: Lattice = D3Q19,
+    u_wall: tuple[float, float, float] = (0.0, 0.0, 0.0),
+    collision: str = "bgk",
+    backend: str = "pallas",
+    interpret: bool = True,
+):
+    """Arena entry point: an in-place ``step(f_buf, mask) -> None`` over a
+    persistent :class:`~repro.core.fields.LevelArena` buffer.
+
+    ``f_buf`` is the level's contiguous ``(B, Q, X, Y, Z)`` SoA buffer; it is
+    handed to the fused kernel whole (one host->device transfer, no
+    per-block restacking) and the result is written back into the same
+    buffer, so all per-block views bound by the arena stay valid. ``mask``
+    may be a precomputed device array — masks only change on AMR events, so
+    callers can cache the transfer across substeps.
+    """
+    step = make_stream_collide(
+        omega=omega,
+        lattice=lattice,
+        u_wall=u_wall,
+        collision=collision,
+        backend=backend,
+        interpret=interpret,
+    )
+
+    def step_arena(f_buf: np.ndarray, mask: jax.Array | np.ndarray) -> None:
+        out = step(jnp.asarray(f_buf), jnp.asarray(mask))
+        np.copyto(f_buf, np.asarray(out))
+
+    return step_arena
 
 
 def fused_stream_collide(

@@ -64,6 +64,9 @@ _WHILE_RE = re.compile(r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\
 _CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
 _DOT_RE = re.compile(r"\bdot\(")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+# modern HLO prints operand types inline: dot(f32[64,64]{1,0} %lhs, ...)
+_DOT_LHS_INLINE_RE = re.compile(r"\bdot\(\s*(\w+)\[([\d,]*)\]")
+_TRIP_COUNT_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 
 
 def _shape_bytes(type_str: str) -> int:
@@ -167,29 +170,48 @@ def analyze_hlo(text: str) -> HloStats:
                 st.collective_count += 1
             if _DOT_RE.search(rhs):
                 out = _shape_dims(rhs)
-                lhs_ref = re.search(r"dot\(%?([\w\.\-]+)", rhs)
                 contract = _CONTRACT_RE.search(rhs)
-                if out and lhs_ref and contract:
+                if out and contract:
                     out_elems = 1
                     for d in out[0]:
                         out_elems *= d
+                    # lhs shape: prefer the inline operand type (modern HLO
+                    # prints it right in the operand list); fall back to the
+                    # symbol table for %name-only operand syntax
+                    lhs_shape: tuple[list[int], str] | None = None
+                    im = _DOT_LHS_INLINE_RE.search(rhs)
+                    if im:
+                        dtype, dims = im.groups()
+                        lhs_shape = (
+                            [int(d) for d in dims.split(",")] if dims else [],
+                            dtype,
+                        )
+                    else:
+                        lhs_ref = re.search(r"dot\(%?([\w\.\-]+)", rhs)
+                        lhs_rhs = symbols.get(lhs_ref.group(1)) if lhs_ref else None
+                        if lhs_rhs:
+                            lhs_shape = _shape_dims(lhs_rhs)
                     k = 1
-                    lhs_rhs = symbols.get(lhs_ref.group(1))
-                    if lhs_rhs:
-                        lhs_shape = _shape_dims(lhs_rhs)
-                        if lhs_shape and contract.group(1):
-                            for ci in contract.group(1).split(","):
-                                idx = int(ci)
-                                if idx < len(lhs_shape[0]):
-                                    k *= lhs_shape[0][idx]
+                    if lhs_shape and contract.group(1):
+                        for ci in contract.group(1).split(","):
+                            idx = int(ci)
+                            if idx < len(lhs_shape[0]):
+                                k *= lhs_shape[0][idx]
                     st.dot_flops += 2.0 * out_elems * k
             wm = _WHILE_RE.search(rhs)
             if wm:
                 st.whiles.append((wm.group(1), wm.group(2)))
+                # XLA often records the trip count right on the while op;
+                # prefer that over the constant recovered from the condition
+                tm = _TRIP_COUNT_RE.search(rhs)
+                if tm:
+                    cond_trip[wm.group(1)] = int(tm.group(1))
         comps[name] = st
         consts = [int(c) for c in _CONST_RE.findall("\n".join(lines))]
         if consts:
-            cond_trip[name] = max(consts)
+            # a known_trip_count recorded on the while op itself wins over
+            # the constant recovered from the condition computation
+            cond_trip.setdefault(name, max(consts))
 
     # propagate multipliers down the while-nesting tree
     mult: dict[str, float] = {name: 0.0 for name in comps}

@@ -8,7 +8,7 @@ refinement criterion (§3.1), and the AMR-coupled simulation driver.
 """
 
 from .lattice import D3Q19, D3Q27, Lattice
-from .grid import CellType, LBMBlockSpec, make_lbm_registry
+from .grid import CellType, LBMBlockSpec, make_lbm_fields, make_lbm_registry
 
 __all__ = [
     "D3Q19",
@@ -16,6 +16,7 @@ __all__ = [
     "Lattice",
     "CellType",
     "LBMBlockSpec",
+    "make_lbm_fields",
     "make_lbm_registry",
     "AMRLBM",
     "LidDrivenCavityConfig",

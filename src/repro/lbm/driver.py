@@ -13,15 +13,25 @@ exchange) with the control plane (the four-step AMR pipeline):
   repartitioning, which restores the §3.3 overlap-consistency invariant
   (octets of fine cells agree with the overlapping coarse cell) exactly.
 
-The stepping itself batches all blocks of a level into one (B, Q, X, Y, Z)
-stack and calls the fused Pallas kernel (interpret mode on CPU).
+Stepping modes (``LidDrivenCavityConfig.stepping_mode``):
+
+* ``"arena"`` (default) — blocks live in persistent per-level
+  :class:`~repro.core.fields.LevelArena` buffers; every ``Block.data`` entry
+  is a zero-copy view, ghost exchange writes into the buffers in place, and
+  the kernel's arena entry point steps a whole level per call with no
+  per-substep ``np.stack``/copy-out. Device masks are cached per level and
+  only re-uploaded after AMR events.
+* ``"restack"`` — the seed behavior (stack all blocks of a level into a
+  fresh array every substep, copy results back out per block), kept as the
+  baseline for the ``stepping`` benchmark.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -30,14 +40,15 @@ from ..core import (
     Comm,
     DiffusionBalancer,
     ForestGeometry,
+    LevelArena,
     SFCBalancer,
     make_uniform_forest,
 )
 from ..core.forest import Block, BlockForest
-from ..kernels.lbm_collide.ops import make_stream_collide
+from ..kernels.lbm_collide.ops import make_arena_stream_collide, make_stream_collide
 from ..kernels.lbm_collide.ref import equilibrium
 from .criteria import VelocityGradientCriterion, macroscopic
-from .grid import CellType, LBMBlockSpec, block_world_box, make_lbm_registry
+from .grid import CellType, LBMBlockSpec, block_world_box, make_lbm_fields
 from .halo import fill_ghost_layers
 from .lattice import D3Q19, omega_for_level
 
@@ -57,6 +68,7 @@ class LidDrivenCavityConfig:
     refine_lower: float = 0.015
     balancer: str = "diffusion-pushpull"  # | "diffusion-push" | "morton" | "hilbert"
     kernel_backend: str = "pallas"
+    stepping_mode: str = "arena"  # | "restack" (seed baseline)
     obstacle_fn: Callable[[np.ndarray], np.ndarray] | None = None  # (N,3)->bool
 
 
@@ -75,11 +87,17 @@ def _make_balancer(name: str):
 class AMRLBM:
     def __init__(self, cfg: LidDrivenCavityConfig):
         self.cfg = cfg
+        assert cfg.stepping_mode in ("arena", "restack"), cfg.stepping_mode
         for n in cfg.cells_per_block:  # power-of-two cells keep halo regions
             assert n & (n - 1) == 0, "cells_per_block must be powers of two"
         self.spec = LBMBlockSpec(cells=cfg.cells_per_block, lattice=D3Q19)
         self.geom = ForestGeometry(root_grid=cfg.root_grid, max_level=12)
-        self.registry = make_lbm_registry(self.spec)
+        self.fields = make_lbm_fields(self.spec)
+        self.registry = self.fields  # typed registry drives all subsystems
+        # restack mode never reads SoA buffers — don't pay for keeping them
+        self.arena: LevelArena | None = (
+            LevelArena(self.fields) if cfg.stepping_mode == "arena" else None
+        )
         self.comm = Comm(cfg.nranks)
         self.pipeline = AMRPipeline(
             balancer=_make_balancer(cfg.balancer), registry=self.registry
@@ -92,8 +110,15 @@ class AMRLBM:
         )
         self.forest: BlockForest = make_uniform_forest(self.geom, cfg.nranks, level=0)
         self._steppers: dict[int, Callable] = {}
+        self._mask_dev: dict[int, jax.Array] = {}  # per-level device mask cache
+        # ghost-exchange plans keyed by active level set; valid between arena
+        # adoptions (restack mode rebinds arrays per substep, so no caching)
+        self._halo_plans: dict | None = {} if self.arena is not None else None
+        self._cache_version = -1  # last arena.version the caches were built for
         for blk in self.forest.all_blocks():
             self._init_block(blk)
+        if self.arena is not None:
+            self.arena.adopt(self.forest)
         self.refresh_masks()
         self.coarse_step = 0
         self.amr_cycles = 0
@@ -103,7 +128,7 @@ class AMRLBM:
         rho = jnp.ones(self.spec.mask_shape, dtype=jnp.float32)
         u = jnp.zeros((3, *self.spec.mask_shape), dtype=jnp.float32)
         blk.data["pdf"] = np.array(equilibrium(rho, u, self.spec.lattice))  # copy: must stay writable
-        blk.data["mask"] = np.zeros(self.spec.mask_shape, dtype=np.int32)
+        blk.data["mask"] = self.fields.alloc("mask")
 
     def _cell_centers(self, blk: Block) -> np.ndarray:
         """World coordinates of all (ghosted) cell centers, shape (X,Y,Z,3)."""
@@ -118,7 +143,8 @@ class AMRLBM:
 
     def refresh_masks(self) -> None:
         """Re-derive cell types from the analytic geometry (domain walls, the
-        moving lid at the top z face, optional obstacles)."""
+        moving lid at the top z face, optional obstacles). Writes in place so
+        arena views stay bound; the device mask cache is invalidated."""
         top = float(self.geom.root_grid[2])
         for blk in self.forest.all_blocks():
             xyz = self._cell_centers(blk)
@@ -135,12 +161,13 @@ class AMRLBM:
             if self.cfg.obstacle_fn is not None:
                 obst = self.cfg.obstacle_fn(xyz.reshape(-1, 3)).reshape(mask.shape)
                 mask[obst & (mask == 0)] = CellType.WALL
-            blk.data["mask"] = mask
+            blk.data["mask"][...] = mask
+        self._mask_dev.clear()
 
     # -- stepping ---------------------------------------------------------------
     def _stepper(self, level: int) -> Callable:
         if level not in self._steppers:
-            self._steppers[level] = make_stream_collide(
+            kw = dict(
                 omega=omega_for_level(self.cfg.omega, level),
                 lattice=self.spec.lattice,
                 u_wall=self.cfg.u_lid,
@@ -148,27 +175,65 @@ class AMRLBM:
                 backend=self.cfg.kernel_backend,
                 interpret=True,
             )
+            make = (
+                make_arena_stream_collide
+                if self.cfg.stepping_mode == "arena"
+                else make_stream_collide
+            )
+            self._steppers[level] = make(**kw)
         return self._steppers[level]
 
+    def _sync_caches(self) -> None:
+        """Drop device masks and ghost plans if the arena rebound storage
+        since they were built — invalidation by mechanism, not by call-site
+        discipline (any future adopt site is covered automatically)."""
+        if self.arena is not None and self._cache_version != self.arena.version:
+            self._mask_dev.clear()
+            self._halo_plans.clear()
+            self._cache_version = self.arena.version
+
+    def _level_mask(self, level: int) -> jax.Array:
+        """Device-resident (B, X, Y, Z) mask stack, cached across substeps."""
+        self._sync_caches()
+        m = self._mask_dev.get(level)
+        if m is None:
+            m = jnp.asarray(self.arena.buffer(level, "mask"))
+            self._mask_dev[level] = m
+        return m
+
     def _step_level(self, level: int) -> None:
-        blocks = [b for b in self.forest.all_blocks() if b.level == level]
-        if not blocks:
+        if self.cfg.stepping_mode == "restack":
+            blocks = [b for b in self.forest.all_blocks() if b.level == level]
+            if not blocks:
+                return
+            f = jnp.asarray(np.stack([b.data["pdf"] for b in blocks]))
+            m = jnp.asarray(np.stack([b.data["mask"] for b in blocks]))
+            f = self._stepper(level)(f, m)
+            out = np.array(f)  # copy out of the (read-only) jax buffer
+            for i, b in enumerate(blocks):
+                b.data["pdf"] = out[i]
             return
-        f = jnp.asarray(np.stack([b.data["pdf"] for b in blocks]))
-        m = jnp.asarray(np.stack([b.data["mask"] for b in blocks]))
-        f = self._stepper(level)(f, m)
-        out = np.array(f)  # copy out of the (read-only) jax buffer
-        for i, b in enumerate(blocks):
-            b.data["pdf"] = out[i]
+        buf = self.arena.buffer(level, "pdf")
+        if buf is None or buf.shape[0] == 0:
+            return
+        # in-place: reads and writes the persistent level buffer directly
+        self._stepper(level)(buf, self._level_mask(level))
 
     def advance(self, coarse_steps: int = 1) -> None:
         """Advance by coarse time steps with per-level substepping."""
+        self._sync_caches()
         levels = self.forest.levels_in_use()
         lmax = max(levels)
         for _ in range(coarse_steps):
             for s in range(2**lmax):
                 active = {l for l in levels if s % (2 ** (lmax - l)) == 0}
-                fill_ghost_layers(self.forest, self.spec, fields=("pdf",), levels=active)
+                fill_ghost_layers(
+                    self.forest,
+                    self.fields,
+                    fields=("pdf",),
+                    levels=active,
+                    plan_cache=self._halo_plans,
+                )
                 for l in sorted(active, reverse=True):
                     self._step_level(l)
             self.coarse_step += 1
@@ -181,8 +246,11 @@ class AMRLBM:
         )
         if report.executed:
             self.amr_cycles += 1
+            if self.arena is not None:
+                self.arena.adopt(self.forest)  # repack SoA buffers, rebind views
+                self._sync_caches()
             self.refresh_masks()
-            fill_ghost_layers(self.forest, self.spec, fields=("pdf",))
+            fill_ghost_layers(self.forest, self.fields, fields=("pdf",))
         return report
 
     def run(self, coarse_steps: int, amr_interval: int = 4) -> None:

@@ -1,21 +1,22 @@
-"""Per-block uniform grids and their migration serializers (paper §3.3).
+"""Per-block uniform grids declared through the typed field API (paper §3.3).
 
 Every block stores a grid of the same size (paper Fig. 1), independent of its
 level: ``(Q, nx+2, ny+2, nz+2)`` PDFs plus an ``(nx+2, ny+2, nz+2)`` cell-type
-mask, with one ghost layer. The six serialization callbacks implement the
-paper's refinement data path exactly:
+mask, with one ghost layer. Instead of hand-writing the six migration
+callbacks per field (the seed's ``make_lbm_registry`` sextuples), each field
+is one :class:`~repro.core.fields.FieldSpec` declaration; the
+:class:`~repro.core.fields.FieldRegistry` derives migration, checkpoint, and
+resilience behavior from it:
 
-* **split**: the *unmodified* coarse octant is serialized and sent; the
-  distribution onto the newly allocated finer grid happens on the receiving
-  side during deserialization (volumetric copy, [54]/[16]) — §3.3: "Only
-  during deserialization, this data is distributed to and interpolated on
-  the newly allocated, finer grids";
-* **merge**: coarsening (2x2x2 averaging) happens on the *sending* side
-  before serialization; the receiver only assembles the eight coarse octant
-  payloads — §3.3.
-
-The volumetric copy/average pair is mass-conservative: split followed by
-merge is the identity on cell averages.
+* ``pdf``  — ``refine="interpolate"``, ``coarsen="restrict"``: the volumetric
+  copy/average pair of [54]/[16]. Split serializes the *unmodified* coarse
+  octant and prolongs on the receiver (§3.3: "Only during deserialization,
+  this data is distributed to and interpolated on the newly allocated, finer
+  grids"); merge restricts (2x2x2 average) on the sender. Split followed by
+  merge is the identity on cell averages — mass-conservative.
+* ``mask`` — ``refine="inject"``, ``coarsen="max"``: every octet of fine
+  cells takes the type of the coarse cell (§3.3 overlap consistency);
+  merging prefers walls.
 """
 
 from __future__ import annotations
@@ -25,11 +26,16 @@ from dataclasses import dataclass
 import numpy as np
 
 from ..core.blockid import ForestGeometry
-from ..core.forest import Block
-from ..core.migration import BlockDataItem, BlockDataRegistry
+from ..core.fields import FieldRegistry, FieldSpec
 from .lattice import D3Q19, Lattice
 
-__all__ = ["CellType", "LBMBlockSpec", "make_lbm_registry", "block_world_box"]
+__all__ = [
+    "CellType",
+    "LBMBlockSpec",
+    "make_lbm_fields",
+    "make_lbm_registry",
+    "block_world_box",
+]
 
 
 class CellType:
@@ -69,106 +75,30 @@ def block_world_box(geom: ForestGeometry, bid: int) -> tuple[np.ndarray, np.ndar
     return box[:3] * scale, box[3:] * scale
 
 
-def _octant_slices(o: int, n: tuple[int, int, int], g: int) -> tuple[slice, slice, slice]:
-    """Interior slices of octant ``o`` of a ghosted (nx+2g, ...) array."""
-    ox, oy, oz = o & 1, (o >> 1) & 1, (o >> 2) & 1
-    nx, ny, nz = n
-    return (
-        slice(g + ox * nx // 2, g + (ox + 1) * nx // 2),
-        slice(g + oy * ny // 2, g + (oy + 1) * ny // 2),
-        slice(g + oz * nz // 2, g + (oz + 1) * nz // 2),
-    )
-
-
-def _coarsen2(a: np.ndarray) -> np.ndarray:
-    """Average 2x2x2 groups over the last three axes (volumetric merge)."""
-    s = a.shape
-    x, y, z = s[-3] // 2, s[-2] // 2, s[-1] // 2
-    a = a.reshape(*s[:-3], x, 2, y, 2, z, 2)
-    return a.mean(axis=(-5, -3, -1))
-
-
-def _refine2(a: np.ndarray) -> np.ndarray:
-    """Replicate each cell into 2x2x2 (volumetric split)."""
-    for ax in (-3, -2, -1):
-        a = np.repeat(a, 2, axis=ax)
-    return a
-
-
-def make_lbm_registry(spec: LBMBlockSpec) -> BlockDataRegistry:
-    nx, ny, nz = spec.cells
-    g = spec.ghost
-    assert nx % 2 == ny % 2 == nz % 2 == 0, "cells per block must be even"
-
-    def pdf_ser_move(data: np.ndarray, _blk: Block) -> np.ndarray:
-        return data
-
-    def pdf_des_move(payload: np.ndarray, _blk: Block) -> np.ndarray:
-        return payload
-
-    def pdf_ser_split(data: np.ndarray, _blk: Block, o: int) -> np.ndarray:
-        sx, sy, sz = _octant_slices(o, spec.cells, g)
-        return np.ascontiguousarray(data[:, sx, sy, sz])  # unmodified coarse data
-
-    def pdf_des_split(payload: np.ndarray, _blk: Block) -> np.ndarray:
-        out = np.zeros(spec.pdf_shape, dtype=spec.dtype)
-        out[:, g:-g, g:-g, g:-g] = _refine2(payload)  # interpolate on receiver
-        return out
-
-    def pdf_ser_merge(data: np.ndarray, _blk: Block) -> np.ndarray:
-        return _coarsen2(data[:, g:-g, g:-g, g:-g]).astype(spec.dtype)  # coarsen on sender
-
-    def pdf_des_merge(parts: dict[int, np.ndarray], _blk: Block) -> np.ndarray:
-        out = np.zeros(spec.pdf_shape, dtype=spec.dtype)
-        for o, payload in parts.items():
-            sx, sy, sz = _octant_slices(o, spec.cells, g)
-            out[:, sx, sy, sz] = payload
-        return out
-
-    def mask_ser_split(data: np.ndarray, _blk: Block, o: int) -> np.ndarray:
-        sx, sy, sz = _octant_slices(o, spec.cells, g)
-        return np.ascontiguousarray(data[sx, sy, sz])
-
-    def mask_des_split(payload: np.ndarray, _blk: Block) -> np.ndarray:
-        out = np.zeros(spec.mask_shape, dtype=np.int32)
-        # every octet of fine cells takes the type of the coarse cell (§3.3)
-        out[g:-g, g:-g, g:-g] = _refine2(payload)
-        return out
-
-    def mask_ser_merge(data: np.ndarray, _blk: Block) -> np.ndarray:
-        interior = data[g:-g, g:-g, g:-g]
-        x, y, z = interior.shape
-        grouped = interior.reshape(x // 2, 2, y // 2, 2, z // 2, 2)
-        return grouped.max(axis=(1, 3, 5)).astype(np.int32)  # prefer walls
-
-    def mask_des_merge(parts: dict[int, np.ndarray], _blk: Block) -> np.ndarray:
-        out = np.zeros(spec.mask_shape, dtype=np.int32)
-        for o, payload in parts.items():
-            sx, sy, sz = _octant_slices(o, spec.cells, g)
-            out[sx, sy, sz] = payload
-        return out
-
-    reg = BlockDataRegistry()
-    reg.register(
-        "pdf",
-        BlockDataItem(
-            serialize_move=pdf_ser_move,
-            deserialize_move=pdf_des_move,
-            serialize_split=pdf_ser_split,
-            deserialize_split=pdf_des_split,
-            serialize_merge=pdf_ser_merge,
-            deserialize_merge=pdf_des_merge,
+def make_lbm_fields(spec: LBMBlockSpec) -> FieldRegistry:
+    """The whole LBM data declaration: two typed fields, nothing hand-rolled."""
+    return FieldRegistry(
+        cells=spec.cells,
+        fields=(
+            FieldSpec(
+                "pdf",
+                dtype=spec.dtype,
+                shape=(spec.lattice.Q,),
+                ghost=spec.ghost,
+                refine="interpolate",
+                coarsen="restrict",
+            ),
+            FieldSpec(
+                "mask",
+                dtype=np.int32,
+                ghost=spec.ghost,
+                refine="inject",
+                coarsen="max",
+            ),
         ),
     )
-    reg.register(
-        "mask",
-        BlockDataItem(
-            serialize_move=lambda d, b: d,
-            deserialize_move=lambda p, b: p,
-            serialize_split=mask_ser_split,
-            deserialize_split=mask_des_split,
-            serialize_merge=mask_ser_merge,
-            deserialize_merge=mask_des_merge,
-        ),
-    )
-    return reg
+
+
+def make_lbm_registry(spec: LBMBlockSpec) -> FieldRegistry:
+    """Backward-compatible name; the six callbacks are now derived."""
+    return make_lbm_fields(spec)

@@ -20,10 +20,11 @@ from __future__ import annotations
 import numpy as np
 
 from ..core.blockid import ForestGeometry
+from ..core.fields import FieldRegistry
 from ..core.forest import Block, BlockForest
 from .grid import LBMBlockSpec
 
-__all__ = ["fill_ghost_layers", "ghost_regions"]
+__all__ = ["fill_ghost_layers", "ghost_regions", "build_ghost_plan", "run_ghost_plan"]
 
 
 def _boxes(geom: ForestGeometry, bid: int) -> tuple[np.ndarray, np.ndarray]:
@@ -91,26 +92,94 @@ def _extract(arr: np.ndarray, kind: str, src) -> np.ndarray:
     return arr[..., ix[:, None, None], iy[None, :, None], iz[None, None, :]]
 
 
-def fill_ghost_layers(
+def build_ghost_plan(
     forest: BlockForest,
-    spec: LBMBlockSpec,
+    spec: LBMBlockSpec | FieldRegistry,
     *,
     fields: tuple[str, ...] = ("pdf",),
     levels: set[int] | None = None,
-) -> None:
-    """Refresh ghost layers of all blocks (optionally only given levels)."""
+) -> list[tuple]:
+    """Precompute the ghost-exchange copy plan: one (target view, kind,
+    source) entry per block/neighbor/field, with all geometry math and slice
+    construction done once.
+
+    The plan holds zero-copy views into the blocks' storage, so it stays
+    valid exactly as long as the forest topology AND the backing arrays are
+    unchanged — i.e. between arena adoptions. This is the payoff of
+    persistent :class:`~repro.core.fields.LevelArena` storage: the seed's
+    per-substep restacking invalidated every array each step, making a
+    persistent plan impossible.
+    """
+    if isinstance(spec, FieldRegistry):
+        by_ghost: dict[int, list[str]] = {}
+        for name in fields:
+            by_ghost.setdefault(spec.fields[name].ghost, []).append(name)
+        groups = [
+            (LBMBlockSpec(cells=spec.cells, ghost=g), tuple(names))
+            for g, names in by_ghost.items()
+        ]
+    else:
+        groups = [(spec, tuple(fields))]
     geom = forest.geom
     by_id: dict[int, Block] = {b.bid: b for b in forest.all_blocks()}
+    plan: list[tuple] = []
     for blk in by_id.values():
         if levels is not None and blk.level not in levels:
             continue
         for nbid in blk.neighbors:
             nb = by_id[nbid]
-            reg = ghost_regions(geom, spec, blk, nbid, nb.level)
-            if reg is None:
-                continue
-            target, (kind, src) = reg
-            for name in fields:
-                blk.data[name][..., target[0], target[1], target[2]] = _extract(
-                    nb.data[name], kind, src
-                )
+            for sp, names in groups:
+                reg = ghost_regions(geom, sp, blk, nbid, nb.level)
+                if reg is None:
+                    continue
+                target, (kind, src) = reg
+                for name in names:
+                    tgt = blk.data[name][..., target[0], target[1], target[2]]
+                    if kind == "same":  # fast path: a plain view-to-view copy
+                        plan.append(
+                            (tgt, kind, nb.data[name][..., src[0], src[1], src[2]])
+                        )
+                    else:
+                        plan.append((tgt, kind, (nb.data[name], src)))
+    return plan
+
+
+def run_ghost_plan(plan: list[tuple]) -> None:
+    """Execute a precomputed exchange plan (pure array copies/resampling)."""
+    for tgt, kind, payload in plan:
+        if kind == "same":
+            tgt[...] = payload
+        else:  # fine / coarse: resample through the shared extractor
+            arr, src = payload
+            tgt[...] = _extract(arr, kind, src)
+
+
+def fill_ghost_layers(
+    forest: BlockForest,
+    spec: LBMBlockSpec | FieldRegistry,
+    *,
+    fields: tuple[str, ...] = ("pdf",),
+    levels: set[int] | None = None,
+    plan_cache: dict | None = None,
+) -> None:
+    """Refresh ghost layers of all blocks (optionally only given levels).
+
+    ``spec`` is either an :class:`LBMBlockSpec` (one ghost width for all
+    ``fields``) or a :class:`FieldRegistry`, in which case each field uses
+    the ghost width of its own declaration. Writes happen in place, so when
+    blocks are arena-backed the level buffers are updated directly.
+
+    With ``plan_cache`` (a dict owned by the caller, who must clear it on
+    every topology/storage change) the exchange plan is built once per
+    distinct level set and replayed on subsequent calls.
+    """
+    if plan_cache is None:
+        run_ghost_plan(build_ghost_plan(forest, spec, fields=fields, levels=levels))
+        return
+    key = (None if levels is None else frozenset(levels), tuple(fields))
+    plan = plan_cache.get(key)
+    if plan is None:
+        plan = plan_cache[key] = build_ghost_plan(
+            forest, spec, fields=fields, levels=levels
+        )
+    run_ghost_plan(plan)
