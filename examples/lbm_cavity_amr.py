@@ -3,8 +3,9 @@
 Runs the LBM (D3Q19, TRT) with the velocity-gradient refinement criterion,
 diffusion load balancing, and per-level time stepping on persistent
 LevelArena buffers (use ``--mode restack`` for the legacy per-substep
-restacking path). Prints per-epoch diagnostics including the AMR pipeline
-stage costs.
+restacking path, ``--mode sharded`` for the rank-sharded data plane with
+cross-rank halo messaging). Prints per-epoch diagnostics including the AMR
+pipeline stage costs and, for the sharded mode, data-plane halo traffic.
 
     PYTHONPATH=src python examples/lbm_cavity_amr.py [--steps 12] [--mode arena]
 """
@@ -18,7 +19,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=12)
     ap.add_argument("--amr-interval", type=int, default=3)
-    ap.add_argument("--mode", choices=("arena", "restack"), default="arena")
+    ap.add_argument("--mode", choices=("arena", "sharded", "restack"), default="arena")
     args = ap.parse_args()
 
     cfg = LidDrivenCavityConfig(
@@ -50,6 +51,10 @@ def main() -> None:
         )
         for lvl, counts in levels.items():
             print(f"    L{lvl}: max/rank={max(counts)} total={sum(counts)}")
+    halo = sim.data_stats["halo"]
+    if halo.p2p_bytes:
+        print(f"halo traffic: {halo.p2p_bytes} bytes in {halo.p2p_messages} "
+              f"p2p messages over {halo.exchange_rounds} rounds")
     print(f"done: {sim.amr_cycles} AMR cycles executed")
 
 

@@ -13,7 +13,7 @@ from .forest import Block, BlockForest, make_forest_from_levels, make_uniform_fo
 from .refine import mark_and_balance_targets
 from .proxy import build_proxy, migrate_proxy_blocks
 from .migration import BlockDataItem, BlockDataRegistry, migrate_data
-from .fields import FieldRegistry, FieldSpec, LevelArena
+from .fields import FieldRegistry, FieldSpec, LevelArena, RankArenas
 from .pipeline import AMRPipeline, CycleReport
 from .balancing import DiffusionBalancer, SFCBalancer
 
@@ -34,6 +34,7 @@ __all__ = [
     "FieldSpec",
     "FieldRegistry",
     "LevelArena",
+    "RankArenas",
     "migrate_data",
     "AMRPipeline",
     "CycleReport",

@@ -71,6 +71,12 @@ class DiffusionBalancer:
     # filled in by __call__ for introspection/benchmarks:
     last_balanced: bool = field(default=False, init=False)
     _last_progress: bool = field(default=True, init=False)
+    # per-main-iteration flow snapshots (property tests pin their invariants):
+    # raw Cybenko flows are exactly antisymmetric (f_ij = -f_ji, so every
+    # edge's flow sums to zero globally); the adjusted flows bound how much
+    # block weight the push/pull selection may move per edge direction.
+    last_flows_raw: list[dict[int, list[float]]] = field(default_factory=list, init=False)
+    last_flows: list[dict[int, list[float]]] = field(default_factory=list, init=False)
 
     # -- helpers -----------------------------------------------------------------
     def _neighbor_ranks(self, proxy: BlockForest, r: int) -> list[int]:
@@ -122,7 +128,11 @@ class DiffusionBalancer:
         for it in range(self.flow_iterations):
             for r in range(R):
                 for j in nbrs[r]:
-                    comm.send(r, j, "w", (r, w_cur[r]),
+                    # copy: a real message is a snapshot of the sender's state
+                    # at send time — passing the live list would let later
+                    # ranks observe mid-superstep updates (and break the
+                    # f_ij = -f_ji antisymmetry of Cybenko's scheme)
+                    comm.send(r, j, "w", (r, list(w_cur[r])),
                               nbytes=BYTES_RANK + BYTES_FLOAT * len(levels))
             inbox = comm.exchange()
             w_nb: list[dict[int, list[float]]] = [dict() for _ in range(R)]
@@ -140,6 +150,10 @@ class DiffusionBalancer:
                         delta[li] += fp
                 for li in range(len(levels)):
                     w_cur[r][li] -= delta[li]
+
+        self.last_flows_raw = [
+            {j: list(v) for j, v in flows[r].items()} for r in range(R)
+        ]
 
         # -- optional global reduction #1: exact global average (paper) --------
         # "This information can be used to adapt the process local
@@ -222,6 +236,8 @@ class DiffusionBalancer:
                         for j in nbrs[r]:
                             if flows[r][j][li] < 0 or f_sel[j] > 0:
                                 flows[r][j][li] = -f_sel[j]
+
+        self.last_flows = [{j: list(v) for j, v in flows[r].items()} for r in range(R)]
 
         # -- block selection: push (Alg. 3) or pull (Alg. 4) -------------------
         use_pull = self.mode == "pull" or (self.mode == "pushpull" and iteration % 2 == 1)

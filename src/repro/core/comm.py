@@ -72,6 +72,7 @@ class CommStats:
         return {
             "nranks": self.nranks,
             "rounds": self.rounds,
+            "exchange_rounds": self.exchange_rounds,
             "p2p_messages": self.p2p_messages,
             "p2p_bytes": self.p2p_bytes,
             "p2p_bytes_per_rank_avg": self.p2p_bytes / max(1, self.nranks),

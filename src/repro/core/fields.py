@@ -48,6 +48,7 @@ __all__ = [
     "FieldSpec",
     "FieldRegistry",
     "LevelArena",
+    "RankArenas",
     "octant_slices",
     "coarsen2",
     "refine2",
@@ -285,13 +286,24 @@ class LevelArena:
     topology change (AMR cycle, restart, resilience restore). It keeps the
     bid -> slot index consistent with the forest and reuses buffers when a
     level's block set is unchanged.
+
+    With ``rank`` given, the arena is *rank-sharded*: it packs only blocks
+    owned by that simulated rank, so its memory is O(local blocks) — the
+    paper's per-rank bound — and a set of such arenas (:class:`RankArenas`)
+    partitions the forest's data plane by owner.
     """
 
-    def __init__(self, registry: FieldRegistry) -> None:
+    def __init__(self, registry: FieldRegistry, rank: int | None = None) -> None:
         self.registry = registry
+        self.rank = rank  # None: whole forest; int: only blocks owned by rank
         self._bufs: dict[int, dict[str, np.ndarray]] = {}  # level -> field -> SoA
         self._slots: dict[int, dict[int, int]] = {}  # level -> bid -> slot
         self.version = 0  # bumped on every adopt (cache invalidation hook)
+
+    def _owned(self, forest: BlockForest) -> Iterable[Block]:
+        if self.rank is None:
+            return forest.all_blocks()
+        return forest.local_blocks(self.rank).values()
 
     # -- data-plane access ------------------------------------------------------
     def levels(self) -> list[int]:
@@ -320,7 +332,7 @@ class LevelArena:
         checkpoint load, or block init) are copied into their slot once.
         """
         by_level: dict[int, list[Block]] = {}
-        for b in forest.all_blocks():
+        for b in self._owned(forest):
             by_level.setdefault(b.level, []).append(b)
         new_bufs: dict[int, dict[str, np.ndarray]] = {}
         new_slots: dict[int, dict[int, int]] = {}
@@ -349,9 +361,9 @@ class LevelArena:
 
     # -- invariants (tests / verification) --------------------------------------
     def check_consistent(self, forest: BlockForest) -> None:
-        """Slot index and views agree with the forest topology exactly."""
+        """Slot index and views agree with the (rank-local) forest topology."""
         by_level: dict[int, set[int]] = {}
-        for b in forest.all_blocks():
+        for b in self._owned(forest):
             by_level.setdefault(b.level, set()).add(b.bid)
         assert set(self._slots) == set(by_level), (
             f"arena levels {sorted(self._slots)} != forest levels {sorted(by_level)}"
@@ -362,7 +374,7 @@ class LevelArena:
             assert sorted(slots.values()) == list(range(len(bids))), (
                 f"L{level}: slots not a dense permutation"
             )
-        for b in forest.all_blocks():
+        for b in self._owned(forest):
             slot = self._slots[b.level][b.bid]
             for name in self.registry.fields:
                 buf = self._bufs[b.level][name]
@@ -375,3 +387,53 @@ class LevelArena:
                     view.__array_interface__["data"][0]
                     == expect.__array_interface__["data"][0]
                 ), f"block {b.bid:#x} field {name!r} bound to the wrong slot"
+
+
+class RankArenas:
+    """The rank-sharded data plane: one :class:`LevelArena` per simulated rank.
+
+    Each rank's arena holds only the blocks that rank owns, so every per-rank
+    buffer is bounded by the local block count — stepping a rank touches no
+    other rank's memory, which is what makes the sharded stepping mode an
+    end-to-end distributed data plane (cross-rank ghost data must travel as
+    messages, never as direct reads).
+
+    :meth:`adopt` rebuilds every rank's arena from the forest's current
+    ownership; it is the single maintenance point after migration, refine,
+    coarsen, or restore (the sharded analogue of global restacking). The
+    shared ``version`` counter invalidates downstream caches (device masks,
+    halo exchange plans) exactly like :class:`LevelArena.version` does.
+    """
+
+    def __init__(self, registry: FieldRegistry, nranks: int) -> None:
+        self.registry = registry
+        self.nranks = nranks
+        self.per_rank = [LevelArena(registry, rank=r) for r in range(nranks)]
+        self.version = 0
+
+    def adopt(self, forest: BlockForest) -> None:
+        assert forest.nranks == self.nranks, (forest.nranks, self.nranks)
+        for arena in self.per_rank:
+            arena.adopt(forest)
+        self.version += 1
+
+    def buffer(self, rank: int, level: int, name: str) -> np.ndarray | None:
+        return self.per_rank[rank].buffer(level, name)
+
+    def num_blocks(self, rank: int, level: int) -> int:
+        return self.per_rank[rank].num_blocks(level)
+
+    def levels(self) -> list[int]:
+        return sorted({l for a in self.per_rank for l in a.levels()})
+
+    def held_bytes_per_rank(self) -> list[int]:
+        """Data-plane bytes resident per rank (the Table-1 quantity for the
+        data plane: must stay O(local blocks), independent of nranks)."""
+        return [
+            sum(buf.nbytes for fields in a._bufs.values() for buf in fields.values())
+            for a in self.per_rank
+        ]
+
+    def check_consistent(self, forest: BlockForest) -> None:
+        for arena in self.per_rank:
+            arena.check_consistent(forest)

@@ -33,6 +33,7 @@ class StageStats:
     p2p_bytes: int = 0
     p2p_messages: int = 0
     rounds: int = 0
+    exchange_rounds: int = 0
     collective_bytes_per_rank: int = 0
 
     @staticmethod
@@ -42,9 +43,21 @@ class StageStats:
             p2p_bytes=after["p2p_bytes"] - before["p2p_bytes"],
             p2p_messages=after["p2p_messages"] - before["p2p_messages"],
             rounds=after["rounds"] - before["rounds"],
+            exchange_rounds=after.get("exchange_rounds", 0)
+            - before.get("exchange_rounds", 0),
             collective_bytes_per_rank=after["collective_bytes_per_rank"]
             - before["collective_bytes_per_rank"],
         )
+
+    def add(self, other: "StageStats") -> None:
+        """Accumulate another stage observation (data-plane stages span many
+        substeps; the driver folds each exchange's delta into one entry)."""
+        self.seconds += other.seconds
+        self.p2p_bytes += other.p2p_bytes
+        self.p2p_messages += other.p2p_messages
+        self.rounds += other.rounds
+        self.exchange_rounds += other.exchange_rounds
+        self.collective_bytes_per_rank += other.collective_bytes_per_rank
 
 
 @dataclass

@@ -21,6 +21,17 @@ Stepping modes (``LidDrivenCavityConfig.stepping_mode``):
   the kernel's arena entry point steps a whole level per call with no
   per-substep ``np.stack``/copy-out. Device masks are cached per level and
   only re-uploaded after AMR events.
+* ``"sharded"`` — the rank-sharded data plane: each simulated rank owns its
+  own per-level :class:`~repro.core.fields.RankArenas` buffers holding only
+  locally-owned blocks; intra-rank ghost faces copy in place while
+  cross-rank faces travel as point-to-point messages over the
+  :class:`~repro.core.Comm` fabric (one batched message per neighboring
+  rank pair, sender-side resampling). Each rank's buffers are stepped
+  independently — one kernel call per rank per level, batched across ranks
+  whose buffer shapes agree — and arenas are rebuilt per rank after
+  migration/refine/coarsen instead of restacking globally. Data-plane
+  traffic is attributed in :attr:`AMRLBM.data_stats` ("halo"/"step")
+  alongside the control-plane per-stage counters.
 * ``"restack"`` — the seed behavior (stack all blocks of a level into a
   fresh array every substep, copy results back out per block), kept as the
   baseline for the ``stepping`` benchmark.
@@ -28,6 +39,7 @@ Stepping modes (``LidDrivenCavityConfig.stepping_mode``):
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Callable
 
@@ -41,15 +53,17 @@ from ..core import (
     DiffusionBalancer,
     ForestGeometry,
     LevelArena,
+    RankArenas,
     SFCBalancer,
     make_uniform_forest,
 )
 from ..core.forest import Block, BlockForest
+from ..core.pipeline import StageStats
 from ..kernels.lbm_collide.ops import make_arena_stream_collide, make_stream_collide
 from ..kernels.lbm_collide.ref import equilibrium
 from .criteria import VelocityGradientCriterion, macroscopic
 from .grid import CellType, LBMBlockSpec, block_world_box, make_lbm_fields
-from .halo import fill_ghost_layers
+from .halo import fill_ghost_layers, fill_ghost_layers_sharded
 from .lattice import D3Q19, omega_for_level
 
 __all__ = ["LidDrivenCavityConfig", "AMRLBM"]
@@ -68,7 +82,7 @@ class LidDrivenCavityConfig:
     refine_lower: float = 0.015
     balancer: str = "diffusion-pushpull"  # | "diffusion-push" | "morton" | "hilbert"
     kernel_backend: str = "pallas"
-    stepping_mode: str = "arena"  # | "restack" (seed baseline)
+    stepping_mode: str = "arena"  # | "sharded" (per-rank) | "restack" (seed)
     obstacle_fn: Callable[[np.ndarray], np.ndarray] | None = None  # (N,3)->bool
 
 
@@ -87,7 +101,7 @@ def _make_balancer(name: str):
 class AMRLBM:
     def __init__(self, cfg: LidDrivenCavityConfig):
         self.cfg = cfg
-        assert cfg.stepping_mode in ("arena", "restack"), cfg.stepping_mode
+        assert cfg.stepping_mode in ("arena", "sharded", "restack"), cfg.stepping_mode
         for n in cfg.cells_per_block:  # power-of-two cells keep halo regions
             assert n & (n - 1) == 0, "cells_per_block must be powers of two"
         self.spec = LBMBlockSpec(cells=cfg.cells_per_block, lattice=D3Q19)
@@ -97,6 +111,12 @@ class AMRLBM:
         # restack mode never reads SoA buffers — don't pay for keeping them
         self.arena: LevelArena | None = (
             LevelArena(self.fields) if cfg.stepping_mode == "arena" else None
+        )
+        # sharded mode: one rank-local arena set per simulated rank
+        self.arenas: RankArenas | None = (
+            RankArenas(self.fields, cfg.nranks)
+            if cfg.stepping_mode == "sharded"
+            else None
         )
         self.comm = Comm(cfg.nranks)
         self.pipeline = AMRPipeline(
@@ -110,15 +130,26 @@ class AMRLBM:
         )
         self.forest: BlockForest = make_uniform_forest(self.geom, cfg.nranks, level=0)
         self._steppers: dict[int, Callable] = {}
-        self._mask_dev: dict[int, jax.Array] = {}  # per-level device mask cache
+        # device mask cache; keys: level (arena) or (level, ranks) (sharded)
+        self._mask_dev: dict = {}
         # ghost-exchange plans keyed by active level set; valid between arena
         # adoptions (restack mode rebinds arrays per substep, so no caching)
-        self._halo_plans: dict | None = {} if self.arena is not None else None
+        self._halo_plans: dict | None = (
+            {} if (self.arena is not None or self.arenas is not None) else None
+        )
         self._cache_version = -1  # last arena.version the caches were built for
+        # data-plane stage attribution (sharded halo bytes/rounds live here,
+        # mirroring the control plane's CycleReport.stages)
+        self.data_stats: dict[str, StageStats] = {
+            "halo": StageStats(),
+            "step": StageStats(),
+        }
         for blk in self.forest.all_blocks():
             self._init_block(blk)
         if self.arena is not None:
             self.arena.adopt(self.forest)
+        if self.arenas is not None:
+            self.arenas.adopt(self.forest)
         self.refresh_masks()
         self.coarse_step = 0
         self.amr_cycles = 0
@@ -176,21 +207,29 @@ class AMRLBM:
                 interpret=True,
             )
             make = (
-                make_arena_stream_collide
-                if self.cfg.stepping_mode == "arena"
-                else make_stream_collide
+                make_stream_collide
+                if self.cfg.stepping_mode == "restack"
+                else make_arena_stream_collide
             )
             self._steppers[level] = make(**kw)
         return self._steppers[level]
 
+    def _storage_version(self) -> int:
+        if self.arena is not None:
+            return self.arena.version
+        if self.arenas is not None:
+            return self.arenas.version
+        return -1
+
     def _sync_caches(self) -> None:
-        """Drop device masks and ghost plans if the arena rebound storage
+        """Drop device masks and ghost plans if the arena(s) rebound storage
         since they were built — invalidation by mechanism, not by call-site
         discipline (any future adopt site is covered automatically)."""
-        if self.arena is not None and self._cache_version != self.arena.version:
+        version = self._storage_version()
+        if self._halo_plans is not None and self._cache_version != version:
             self._mask_dev.clear()
             self._halo_plans.clear()
-            self._cache_version = self.arena.version
+            self._cache_version = version
 
     def _level_mask(self, level: int) -> jax.Array:
         """Device-resident (B, X, Y, Z) mask stack, cached across substeps."""
@@ -200,6 +239,43 @@ class AMRLBM:
             m = jnp.asarray(self.arena.buffer(level, "mask"))
             self._mask_dev[level] = m
         return m
+
+    def _group_mask(self, level: int, ranks: tuple[int, ...]) -> jax.Array:
+        """Device mask for a batched group of rank buffers (sharded mode)."""
+        self._sync_caches()
+        key = (level, ranks)
+        m = self._mask_dev.get(key)
+        if m is None:
+            parts = [self.arenas.buffer(r, level, "mask") for r in ranks]
+            m = jnp.asarray(parts[0] if len(parts) == 1 else np.concatenate(parts))
+            self._mask_dev[key] = m
+        return m
+
+    def _step_level_sharded(self, level: int) -> None:
+        """One kernel call per rank per level, batched where shapes agree:
+        ranks whose level buffers hold the same block count share one call
+        (their stacked shapes are identical, so one jit specialization and
+        one device round-trip cover the whole group)."""
+        per_rank = [
+            (r, buf)
+            for r in range(self.cfg.nranks)
+            if (buf := self.arenas.buffer(r, level, "pdf")) is not None
+            and buf.shape[0] > 0
+        ]
+        by_count: dict[int, list[tuple[int, np.ndarray]]] = {}
+        for r, buf in per_rank:
+            by_count.setdefault(buf.shape[0], []).append((r, buf))
+        stepper = self._stepper(level)
+        for nblocks, group in sorted(by_count.items()):
+            ranks = tuple(r for r, _ in group)
+            mask = self._group_mask(level, ranks)
+            if len(group) == 1:
+                stepper(group[0][1], mask)  # in-place on the rank's buffer
+                continue
+            cat = np.concatenate([buf for _, buf in group])
+            stepper(cat, mask)
+            for i, (_r, buf) in enumerate(group):
+                np.copyto(buf, cat[i * nblocks : (i + 1) * nblocks])
 
     def _step_level(self, level: int) -> None:
         if self.cfg.stepping_mode == "restack":
@@ -213,11 +289,45 @@ class AMRLBM:
             for i, b in enumerate(blocks):
                 b.data["pdf"] = out[i]
             return
+        if self.cfg.stepping_mode == "sharded":
+            self._step_level_sharded(level)
+            return
         buf = self.arena.buffer(level, "pdf")
         if buf is None or buf.shape[0] == 0:
             return
         # in-place: reads and writes the persistent level buffer directly
         self._stepper(level)(buf, self._level_mask(level))
+
+    def _exchange_ghosts(self, active: set[int] | None = None) -> None:
+        """Refresh pdf ghost layers for the active levels, attributing the
+        wall time (and, in sharded mode, the p2p bytes/messages/rounds the
+        exchange put on the fabric) to the "halo" data-plane stage."""
+        self._sync_caches()  # an external adopt() must not replay stale plans
+        t0 = time.perf_counter()
+        if self.cfg.stepping_mode == "sharded":
+            s0 = self.comm.stats.summary()
+            fill_ghost_layers_sharded(
+                self.forest,
+                self.fields,
+                self.comm,
+                fields=("pdf",),
+                levels=active,
+                plan_cache=self._halo_plans,
+            )
+            self.data_stats["halo"].add(
+                StageStats.delta(
+                    s0, self.comm.stats.summary(), time.perf_counter() - t0
+                )
+            )
+            return
+        fill_ghost_layers(
+            self.forest,
+            self.fields,
+            fields=("pdf",),
+            levels=active,
+            plan_cache=self._halo_plans,
+        )
+        self.data_stats["halo"].add(StageStats(seconds=time.perf_counter() - t0))
 
     def advance(self, coarse_steps: int = 1) -> None:
         """Advance by coarse time steps with per-level substepping."""
@@ -227,15 +337,13 @@ class AMRLBM:
         for _ in range(coarse_steps):
             for s in range(2**lmax):
                 active = {l for l in levels if s % (2 ** (lmax - l)) == 0}
-                fill_ghost_layers(
-                    self.forest,
-                    self.fields,
-                    fields=("pdf",),
-                    levels=active,
-                    plan_cache=self._halo_plans,
-                )
+                self._exchange_ghosts(active)
+                t0 = time.perf_counter()
                 for l in sorted(active, reverse=True):
                     self._step_level(l)
+                self.data_stats["step"].add(
+                    StageStats(seconds=time.perf_counter() - t0)
+                )
             self.coarse_step += 1
 
     # -- AMR ------------------------------------------------------------------
@@ -248,9 +356,11 @@ class AMRLBM:
             self.amr_cycles += 1
             if self.arena is not None:
                 self.arena.adopt(self.forest)  # repack SoA buffers, rebind views
-                self._sync_caches()
+            if self.arenas is not None:
+                self.arenas.adopt(self.forest)  # rebuild rank-local arenas
+            self._sync_caches()
             self.refresh_masks()
-            fill_ghost_layers(self.forest, self.fields, fields=("pdf",))
+            self._exchange_ghosts()
         return report
 
     def run(self, coarse_steps: int, amr_interval: int = 4) -> None:

@@ -10,21 +10,41 @@ Level transitions use the volumetric scheme of [54]/[16] (paper §3.3):
 * fine -> coarse ghost ("coalescence"): average 2x2x2 fine cells;
 * coarse -> fine ghost ("explosion"): replicate the covering coarse cell.
 
-On a distributed machine this is the standard nonuniform-LBM communication
-of [57]; in this host-plane implementation neighbor data is read directly —
-the AMR *algorithms* themselves never do this, only the stepping data path.
+Two execution models share the same region geometry:
+
+* **host-plane** (:func:`fill_ghost_layers`): neighbor data is read directly
+  regardless of ownership — the seed behavior, kept as the reference;
+* **rank-sharded** (:func:`fill_ghost_layers_sharded`): intra-rank faces are
+  in-place copies, cross-rank faces travel as point-to-point messages over
+  the :class:`~repro.core.comm.Comm` fabric — the standard nonuniform-LBM
+  communication of [57]. Resampling happens on the *sender* (restrict before
+  send, explode before send), so each message carries exactly the ghost
+  region it fills, all patches for one rank pair are batched into a single
+  message per exchange, and only process-graph neighbors ever communicate.
 """
 
 from __future__ import annotations
 
+from dataclasses import dataclass, field
+
 import numpy as np
 
 from ..core.blockid import ForestGeometry
+from ..core.comm import Comm
 from ..core.fields import FieldRegistry
 from ..core.forest import Block, BlockForest
 from .grid import LBMBlockSpec
 
-__all__ = ["fill_ghost_layers", "ghost_regions", "build_ghost_plan", "run_ghost_plan"]
+__all__ = [
+    "fill_ghost_layers",
+    "fill_ghost_layers_sharded",
+    "ghost_regions",
+    "build_ghost_plan",
+    "run_ghost_plan",
+    "RankHaloPlan",
+    "build_rank_halo_plan",
+    "run_rank_halo_plan",
+]
 
 
 def _boxes(geom: ForestGeometry, bid: int) -> tuple[np.ndarray, np.ndarray]:
@@ -92,6 +112,21 @@ def _extract(arr: np.ndarray, kind: str, src) -> np.ndarray:
     return arr[..., ix[:, None, None], iy[None, :, None], iz[None, None, :]]
 
 
+def _field_groups(
+    spec: LBMBlockSpec | FieldRegistry, fields: tuple[str, ...]
+) -> list[tuple[LBMBlockSpec, tuple[str, ...]]]:
+    """Group exchanged fields by ghost width (one region geometry per group)."""
+    if isinstance(spec, FieldRegistry):
+        by_ghost: dict[int, list[str]] = {}
+        for name in fields:
+            by_ghost.setdefault(spec.fields[name].ghost, []).append(name)
+        return [
+            (LBMBlockSpec(cells=spec.cells, ghost=g), tuple(names))
+            for g, names in by_ghost.items()
+        ]
+    return [(spec, tuple(fields))]
+
+
 def build_ghost_plan(
     forest: BlockForest,
     spec: LBMBlockSpec | FieldRegistry,
@@ -110,16 +145,7 @@ def build_ghost_plan(
     per-substep restacking invalidated every array each step, making a
     persistent plan impossible.
     """
-    if isinstance(spec, FieldRegistry):
-        by_ghost: dict[int, list[str]] = {}
-        for name in fields:
-            by_ghost.setdefault(spec.fields[name].ghost, []).append(name)
-        groups = [
-            (LBMBlockSpec(cells=spec.cells, ghost=g), tuple(names))
-            for g, names in by_ghost.items()
-        ]
-    else:
-        groups = [(spec, tuple(fields))]
+    groups = _field_groups(spec, fields)
     geom = forest.geom
     by_id: dict[int, Block] = {b.bid: b for b in forest.all_blocks()}
     plan: list[tuple] = []
@@ -173,13 +199,146 @@ def fill_ghost_layers(
     every topology/storage change) the exchange plan is built once per
     distinct level set and replayed on subsequent calls.
     """
+    run_ghost_plan(
+        _cached_plan(
+            plan_cache,
+            levels,
+            fields,
+            lambda: build_ghost_plan(forest, spec, fields=fields, levels=levels),
+        )
+    )
+
+
+def _cached_plan(plan_cache: dict | None, levels: set[int] | None, fields, build):
+    """Get-or-build an exchange plan keyed by (level set, fields)."""
     if plan_cache is None:
-        run_ghost_plan(build_ghost_plan(forest, spec, fields=fields, levels=levels))
-        return
+        return build()
     key = (None if levels is None else frozenset(levels), tuple(fields))
     plan = plan_cache.get(key)
     if plan is None:
-        plan = plan_cache[key] = build_ghost_plan(
-            forest, spec, fields=fields, levels=levels
+        plan = plan_cache[key] = build()
+    return plan
+
+
+# -- rank-sharded exchange (cross-rank ghosts as p2p messages) ------------------
+
+
+@dataclass
+class RankHaloPlan:
+    """Precomputed sharded exchange: in-place intra-rank copies plus one
+    batched point-to-point message per communicating rank pair.
+
+    ``sends[(src, dst)]`` and ``recvs[(src, dst)]`` are index-aligned: entry
+    ``i`` of the send list produces the patch that entry ``i`` of the receive
+    list writes into. Senders only read arrays owned by ``src``; receivers
+    only write arrays owned by ``dst`` — rank-locality by construction.
+    """
+
+    local: list[tuple] = field(default_factory=list)  # run_ghost_plan entries
+    sends: dict[tuple[int, int], list[tuple]] = field(default_factory=dict)
+    recvs: dict[tuple[int, int], list[np.ndarray]] = field(default_factory=dict)
+    nbytes: dict[tuple[int, int], int] = field(default_factory=dict)
+
+    def rank_pairs(self) -> set[tuple[int, int]]:
+        return set(self.sends)
+
+    def cross_rank_bytes(self) -> int:
+        return sum(self.nbytes.values())
+
+
+def build_rank_halo_plan(
+    forest: BlockForest,
+    spec: LBMBlockSpec | FieldRegistry,
+    *,
+    fields: tuple[str, ...] = ("pdf",),
+    levels: set[int] | None = None,
+) -> RankHaloPlan:
+    """Split the ghost-exchange plan by ownership: same-owner pairs become
+    in-place copies, cross-owner pairs become (sender extract, receiver
+    write) entries batched per rank pair. Like :func:`build_ghost_plan` the
+    plan holds zero-copy views, so it stays valid between arena adoptions."""
+    groups = _field_groups(spec, fields)
+    geom = forest.geom
+    by_id: dict[int, Block] = {b.bid: b for b in forest.all_blocks()}
+    plan = RankHaloPlan()
+    for blk in by_id.values():
+        if levels is not None and blk.level not in levels:
+            continue
+        for nbid in blk.neighbors:
+            nb = by_id[nbid]
+            for sp, names in groups:
+                reg = ghost_regions(geom, sp, blk, nbid, nb.level)
+                if reg is None:
+                    continue
+                target, (kind, src) = reg
+                for name in names:
+                    tgt = blk.data[name][..., target[0], target[1], target[2]]
+                    if nb.owner == blk.owner:
+                        if kind == "same":
+                            plan.local.append(
+                                (tgt, kind, nb.data[name][..., src[0], src[1], src[2]])
+                            )
+                        else:
+                            plan.local.append((tgt, kind, (nb.data[name], src)))
+                    else:
+                        # data flows owner(neighbor) -> owner(block); §2 next-
+                        # neighbor property: communicating ranks must be
+                        # process-graph neighbors (pinned by the conformance
+                        # suite via rank_pairs()).
+                        pair = (nb.owner, blk.owner)
+                        plan.sends.setdefault(pair, []).append(
+                            (nb.data[name], kind, src)
+                        )
+                        plan.recvs.setdefault(pair, []).append(tgt)
+                        plan.nbytes[pair] = plan.nbytes.get(pair, 0) + tgt.nbytes
+    return plan
+
+
+def run_rank_halo_plan(plan: RankHaloPlan, comm: Comm) -> None:
+    """Execute a sharded exchange: local copies in place, then one p2p
+    message per rank pair (sender-side resampling) and one delivery round."""
+    run_ghost_plan(plan.local)
+    if not plan.sends:
+        return  # nothing crosses a rank boundary: no communication round
+    for (src_rank, dst_rank), entries in plan.sends.items():
+        patches = [
+            np.ascontiguousarray(_extract(arr, kind, src))
+            for arr, kind, src in entries
+        ]
+        comm.send(
+            src_rank,
+            dst_rank,
+            "halo",
+            ((src_rank, dst_rank), patches),
+            nbytes=plan.nbytes[(src_rank, dst_rank)],
         )
-    run_ghost_plan(plan)
+    inbox = comm.exchange()
+    for _dst, msgs in inbox.items():
+        for _tag, (pair, patches) in msgs:
+            targets = plan.recvs[pair]
+            assert len(patches) == len(targets), pair
+            for tgt, patch in zip(targets, patches):
+                tgt[...] = patch
+
+
+def fill_ghost_layers_sharded(
+    forest: BlockForest,
+    spec: LBMBlockSpec | FieldRegistry,
+    comm: Comm,
+    *,
+    fields: tuple[str, ...] = ("pdf",),
+    levels: set[int] | None = None,
+    plan_cache: dict | None = None,
+) -> RankHaloPlan:
+    """Sharded counterpart of :func:`fill_ghost_layers`: refresh ghost layers
+    with intra-rank in-place copies and cross-rank p2p messages through
+    ``comm``. Returns the plan used (for traffic introspection). The caller
+    owns ``plan_cache`` and must clear it on every topology/storage change."""
+    plan = _cached_plan(
+        plan_cache,
+        levels,
+        fields,
+        lambda: build_rank_halo_plan(forest, spec, fields=fields, levels=levels),
+    )
+    run_rank_halo_plan(plan, comm)
+    return plan

@@ -102,3 +102,35 @@ def test_balance_conserves_blocks_and_weights(geom3d):
     )
     forest, _ = pipe.run_cycle(forest, comm, None, force_rebalance=True)
     assert forest.num_blocks() == total_before
+
+
+def test_diffusion_flow_conservation_deterministic(geom3d):
+    """Non-hypothesis twin of the property tests in test_property.py: raw
+    Cybenko flows are antisymmetric, and no rank pushes more weight than its
+    positive adjusted outflow per level."""
+    import random
+
+    nranks = 6
+    forest = make_uniform_forest(geom3d, nranks, level=1)
+    rng = random.Random(7)
+    for b in forest.all_blocks():
+        b.weight = rng.choice([1.0, 2.0, 3.0])
+    comm = Comm(nranks)
+    bal = DiffusionBalancer(mode="push", flow_iterations=10, max_main_iterations=5)
+    assignments, _ = bal(forest, comm, 0)
+    total = 0.0
+    for r in range(nranks):
+        for j, flow in bal.last_flows_raw[r].items():
+            back = bal.last_flows_raw[j][r]
+            for li, f in enumerate(flow):
+                assert abs(f + back[li]) < 1e-9, (r, j, li)
+                total += f
+    assert abs(total) < 1e-9
+    for r in range(nranks):
+        pushed: dict[int, float] = {}
+        for bid in assignments[r]:
+            blk = forest.local_blocks(r)[bid]
+            pushed[blk.level] = pushed.get(blk.level, 0.0) + blk.weight
+        for li, w in pushed.items():
+            budget = sum(f[li] for f in bal.last_flows[r].values() if f[li] > 0)
+            assert w <= budget + 1e-9, (r, li, w, budget)

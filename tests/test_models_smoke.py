@@ -8,6 +8,8 @@ import numpy as np
 import pytest
 
 from repro.configs import all_arch_ids, get_config
+
+pytestmark = pytest.mark.slow  # model-zoo smoke: minutes, not data-plane coverage
 from repro.models.zoo import DistContext, build_model
 from repro.train import AdamWConfig, adamw_init, make_train_step
 

@@ -95,6 +95,65 @@ def test_hilbert_index_bijective_in_range(nbits, xyz):
     assert 0 <= h < n**3
 
 
+@given(
+    seed=st.integers(0, 10_000),
+    nranks=st.sampled_from([3, 5, 8]),
+    mode=st.sampled_from(["push", "pull"]),
+)
+@_slow
+def test_diffusion_flow_conservation(seed, nranks, mode):
+    """Cybenko flow conservation: the raw per-edge flows are exactly
+    antisymmetric (f_ij = -f_ji), so every edge — and hence the whole
+    process graph — carries zero net flow."""
+    import random
+
+    forest = make_uniform_forest(GEOM, nranks, level=1)
+    rng = random.Random(seed)
+    for b in forest.all_blocks():
+        b.weight = rng.choice([1.0, 2.0, 3.0])
+    comm = Comm(nranks)
+    bal = DiffusionBalancer(mode=mode, flow_iterations=10, max_main_iterations=5)
+    bal(forest, comm, 0)
+    raw = bal.last_flows_raw
+    assert len(raw) == nranks
+    total = 0.0
+    for r in range(nranks):
+        for j, flow in raw[r].items():
+            back = raw[j][r]  # the process graph is symmetric
+            for li, f in enumerate(flow):
+                assert abs(f + back[li]) < 1e-9, (r, j, li)
+                total += f
+    assert abs(total) < 1e-9
+
+
+@given(seed=st.integers(0, 10_000), nranks=st.sampled_from([3, 5, 8]))
+@_slow
+def test_diffusion_push_never_exceeds_flow(seed, nranks):
+    """Pushed block weight is bounded by the computed flow: per main
+    iteration, no rank ships more weight (per level) than its positive
+    adjusted outflow."""
+    import random
+
+    forest = make_uniform_forest(GEOM, nranks, level=1)
+    rng = random.Random(seed)
+    for b in forest.all_blocks():
+        b.weight = rng.choice([1.0, 2.0])
+    comm = Comm(nranks)
+    bal = DiffusionBalancer(mode="push", flow_iterations=10, max_main_iterations=5)
+    assignments, _ = bal(forest, comm, 0)
+    adj = bal.last_flows
+    for r in range(nranks):
+        pushed: dict[int, float] = {}
+        for bid in assignments[r]:
+            blk = forest.local_blocks(r)[bid]
+            pushed[blk.level] = pushed.get(blk.level, 0.0) + blk.weight
+        for li, w in pushed.items():
+            budget = sum(
+                flow[li] for flow in adj[r].values() if flow[li] > 0
+            )
+            assert w <= budget + 1e-9, (r, li, w, budget)
+
+
 @given(seed=st.integers(0, 10_000), nranks=st.sampled_from([3, 5, 8]))
 @_slow
 def test_diffusion_never_loses_blocks(seed, nranks):

@@ -1,6 +1,7 @@
 """Sharding spec construction for every assigned architecture."""
 
 import jax
+import pytest
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -32,6 +33,7 @@ def _check_divisible(spec_tree, shape_tree):
     jax.tree.map(check, spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, P))
 
 
+@pytest.mark.slow
 def test_param_and_opt_specs_all_archs():
     for arch in all_arch_ids():
         cfg = get_config(arch)

@@ -93,6 +93,7 @@ def test_scaling_argument_diffusion_vs_sfc():
     assert diff_bytes[32] <= diff_bytes[8] * 2.0  # bounded (iterations only)
 
 
+@pytest.mark.slow
 def test_lbm_amr_end_to_end():
     cfg = LidDrivenCavityConfig(
         root_grid=(2, 2, 2),

@@ -1,6 +1,7 @@
 """Training substrate: optimizer math, grad accumulation, data pipeline."""
 
 import jax
+import pytest
 import jax.numpy as jnp
 import numpy as np
 
@@ -36,6 +37,7 @@ def test_loss_decreases_on_structured_data():
     assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
 
 
+@pytest.mark.slow
 def test_microbatch_accumulation_matches_full_batch():
     cfg, model, params = _setup()
     opt = adamw_init(params)
