@@ -200,10 +200,11 @@ def stepping(
     ranks: tuple[int, ...] = (4,),
     steps: int | None = None,
 ) -> None:
-    """Per-substep restacking (seed) vs persistent arena vs the rank-sharded
-    data plane on the lid-driven-cavity config: blocks/s throughput of the
-    full substepping loop (halo exchange + fused kernel), swept over
-    simulated rank counts, appended to the BENCH_stepping.json trajectory.
+    """Per-substep restacking (seed) vs persistent arena vs the device-
+    resident fused superstep vs the rank-sharded data plane on the
+    lid-driven-cavity config: blocks/s throughput of the full substepping
+    loop (halo exchange + fused kernel), swept over simulated rank counts,
+    appended to the BENCH_stepping.json trajectory.
 
     Single runs on a shared host are noise-bound (observed ~1.6x swings), so
     every timing is best-of-``best_of`` (default 2 quick / 3 full)."""
@@ -217,14 +218,14 @@ def stepping(
     k = max(1, k)
     cells = (8, 8, 8) if quick else (16, 16, 16)
     traj_entries = []
-    # restack/arena never consult Block.owner, so their timings are
+    # restack/arena/fused never consult Block.owner, so their timings are
     # rank-independent: measure them once and reuse across the sweep
     baseline: dict[str, tuple[float, float, int]] = {}
     for nranks in ranks:
         results: dict[str, float] = {}
         halo_bytes: dict[str, int] = {}
         wall: dict[str, float] = {}
-        for mode in ("restack", "arena", "sharded"):
+        for mode in ("restack", "arena", "fused", "sharded"):
             if mode != "sharded" and mode in baseline:
                 results[mode], wall[mode], halo_bytes[mode] = baseline[mode]
             else:
@@ -263,8 +264,10 @@ def stepping(
             _csv(f"stepping/{mode}", f"n{nranks}_blocks_per_s", round(results[mode], 1))
             _csv(f"stepping/{mode}", f"n{nranks}_wall_s", round(wall[mode], 4))
         speedup = results["arena"] / results["restack"]
+        fused_rel = results["fused"] / results["restack"]
         sharded_rel = results["sharded"] / results["restack"]
         _csv("stepping", f"n{nranks}_arena_speedup", round(speedup, 3))
+        _csv("stepping", f"n{nranks}_fused_speedup", round(fused_rel, 3))
         _csv("stepping", f"n{nranks}_sharded_speedup", round(sharded_rel, 3))
         _csv("stepping", f"n{nranks}_sharded_halo_bytes_per_step", halo_bytes["sharded"])
         traj_entries.append(
@@ -277,6 +280,7 @@ def stepping(
                 "nranks": nranks,
                 "blocks_per_s": {m: round(v, 1) for m, v in results.items()},
                 "arena_speedup": round(speedup, 3),
+                "fused_speedup": round(fused_rel, 3),
                 "sharded_speedup": round(sharded_rel, 3),
                 "sharded_halo_p2p_bytes_per_step": halo_bytes["sharded"],
             }

@@ -2,10 +2,12 @@
 
 Runs the LBM (D3Q19, TRT) with the velocity-gradient refinement criterion,
 diffusion load balancing, and per-level time stepping on persistent
-LevelArena buffers (use ``--mode restack`` for the legacy per-substep
-restacking path, ``--mode sharded`` for the rank-sharded data plane with
-cross-rank halo messaging). Prints per-epoch diagnostics including the AMR
-pipeline stage costs and, for the sharded mode, data-plane halo traffic.
+LevelArena buffers (use ``--mode fused`` for the device-resident fused
+superstep — one jitted program per coarse step — ``--mode restack`` for the
+legacy per-substep restacking path, ``--mode sharded`` for the rank-sharded
+data plane with cross-rank halo messaging). Prints per-epoch diagnostics
+including the AMR pipeline stage costs and, per mode, data-plane halo
+traffic or host<->device transfer counts.
 
     PYTHONPATH=src python examples/lbm_cavity_amr.py [--steps 12] [--mode arena]
 """
@@ -19,7 +21,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=12)
     ap.add_argument("--amr-interval", type=int, default=3)
-    ap.add_argument("--mode", choices=("arena", "sharded", "restack"), default="arena")
+    ap.add_argument(
+        "--mode", choices=("arena", "fused", "sharded", "restack"), default="arena"
+    )
     args = ap.parse_args()
 
     cfg = LidDrivenCavityConfig(
@@ -55,6 +59,12 @@ def main() -> None:
     if halo.p2p_bytes:
         print(f"halo traffic: {halo.p2p_bytes} bytes in {halo.p2p_messages} "
               f"p2p messages over {halo.exchange_rounds} rounds")
+    if args.mode == "fused":
+        res = sim.arena.device()
+        fused = sim.data_stats["fused"]
+        print(f"fused: {fused.exchange_rounds} in-program exchanges, "
+              f"{res.h2d_transfers} h2d / {res.d2h_transfers} d2h transfers "
+              f"({res.h2d_bytes + res.d2h_bytes} bytes total)")
     print(f"done: {sim.amr_cycles} AMR cycles executed")
 
 

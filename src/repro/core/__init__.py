@@ -13,7 +13,7 @@ from .forest import Block, BlockForest, make_forest_from_levels, make_uniform_fo
 from .refine import mark_and_balance_targets
 from .proxy import build_proxy, migrate_proxy_blocks
 from .migration import BlockDataItem, BlockDataRegistry, migrate_data
-from .fields import FieldRegistry, FieldSpec, LevelArena, RankArenas
+from .fields import DeviceResidency, FieldRegistry, FieldSpec, LevelArena, RankArenas
 from .pipeline import AMRPipeline, CycleReport
 from .balancing import DiffusionBalancer, SFCBalancer
 
@@ -35,6 +35,7 @@ __all__ = [
     "FieldRegistry",
     "LevelArena",
     "RankArenas",
+    "DeviceResidency",
     "migrate_data",
     "AMRPipeline",
     "CycleReport",

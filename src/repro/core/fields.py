@@ -49,6 +49,7 @@ __all__ = [
     "FieldRegistry",
     "LevelArena",
     "RankArenas",
+    "DeviceResidency",
     "octant_slices",
     "coarsen2",
     "refine2",
@@ -299,6 +300,7 @@ class LevelArena:
         self._bufs: dict[int, dict[str, np.ndarray]] = {}  # level -> field -> SoA
         self._slots: dict[int, dict[int, int]] = {}  # level -> bid -> slot
         self.version = 0  # bumped on every adopt (cache invalidation hook)
+        self._residency: "DeviceResidency | None" = None
 
     def _owned(self, forest: BlockForest) -> Iterable[Block]:
         if self.rank is None:
@@ -331,6 +333,10 @@ class LevelArena:
         (no copy); freshly materialized arrays (from migration deserialize,
         checkpoint load, or block init) are copied into their slot once.
         """
+        if self._residency is not None:
+            # device-side results must be flushed before the storage they
+            # mirror is repacked — otherwise computed steps would vanish
+            self._residency.check_no_pending()
         by_level: dict[int, list[Block]] = {}
         for b in self._owned(forest):
             by_level.setdefault(b.level, []).append(b)
@@ -358,6 +364,21 @@ class LevelArena:
         self._bufs = new_bufs
         self._slots = new_slots
         self.version += 1
+
+    # -- device residency -------------------------------------------------------
+    def device(self) -> "DeviceResidency":
+        """The arena's device-residency layer (created on first use).
+
+        Fused stepping keeps whole level buffers resident on the accelerator
+        as ``jax.Array``s; host views are only rematerialized (via
+        :meth:`DeviceResidency.flush`) when migration, checkpointing, or
+        diagnostics actually need them. All host<->device traffic is counted,
+        so tests can assert the steady-state substep loop performs zero
+        transfers.
+        """
+        if self._residency is None:
+            self._residency = DeviceResidency(self)
+        return self._residency
 
     # -- invariants (tests / verification) --------------------------------------
     def check_consistent(self, forest: BlockForest) -> None:
@@ -387,6 +408,122 @@ class LevelArena:
                     view.__array_interface__["data"][0]
                     == expect.__array_interface__["data"][0]
                 ), f"block {b.bid:#x} field {name!r} bound to the wrong slot"
+
+
+class DeviceResidency:
+    """Device-resident mirror of a :class:`LevelArena`, version-tracked both
+    ways.
+
+    Each (level, field) buffer can live in one of three states:
+
+    * **host-only** — no device copy exists; :meth:`fetch` uploads one
+      (counted as an h2d transfer);
+    * **synced** — a device copy exists and matches the host buffer;
+      :meth:`fetch` returns it with no transfer;
+    * **device-newer** — :meth:`store` installed a device-side update (the
+      output of a jitted step); the host view is stale until :meth:`flush`
+      downloads it back into the arena buffer *in place*, so every
+      ``Block.data`` view stays bound.
+
+    Invalidation across topology changes is by mechanism: an arena
+    ``adopt()`` bumps ``arena.version``, which drops all device state on the
+    next access (the buffers it mirrored no longer exist), and refuses to run
+    at all while device-newer results are un-flushed (see
+    :meth:`check_no_pending`). Host-side writes *between* adoptions are a
+    manual contract — numpy views cannot announce mutation — so code that
+    edits host buffers while a synced device copy exists (e.g. the driver's
+    mask refresh) must call :meth:`drop` for the touched field or the edit
+    never reaches the device; :meth:`drop` asserts if it would discard a
+    pending device-side update.
+    """
+
+    def __init__(self, arena: LevelArena) -> None:
+        self.arena = arena
+        self._dev: dict[tuple[int, str], Any] = {}  # (level, field) -> jax.Array
+        self._dev_newer: set[tuple[int, str]] = set()
+        self._arena_version = arena.version
+        self.h2d_transfers = 0
+        self.h2d_bytes = 0
+        self.d2h_transfers = 0
+        self.d2h_bytes = 0
+
+    @property
+    def transfers(self) -> int:
+        """Total host<->device transfers performed (both directions)."""
+        return self.h2d_transfers + self.d2h_transfers
+
+    def _sync_version(self) -> None:
+        if self._arena_version != self.arena.version:
+            # storage was rebound under us: every device copy mirrors a buffer
+            # that no longer backs the forest — drop them all (adopt already
+            # asserted nothing device-newer was pending; backstop here for
+            # version bumps that bypass adopt)
+            self.check_no_pending()
+            self._dev.clear()
+            self._arena_version = self.arena.version
+
+    def fetch(self, level: int, name: str):
+        """The device-resident buffer for (level, field); uploads if absent."""
+        import jax.numpy as jnp
+
+        self._sync_version()
+        key = (level, name)
+        arr = self._dev.get(key)
+        if arr is None:
+            host = self.arena.buffer(level, name)
+            assert host is not None, f"no arena buffer for L{level} {name!r}"
+            arr = jnp.asarray(host)
+            self._dev[key] = arr
+            self.h2d_transfers += 1
+            self.h2d_bytes += host.nbytes
+        return arr
+
+    def store(self, level: int, name: str, value) -> None:
+        """Install a device-side update; the host view becomes stale."""
+        self._sync_version()
+        key = (level, name)
+        host = self.arena.buffer(level, name)
+        assert host is not None and value.shape == host.shape, (
+            f"store shape {getattr(value, 'shape', None)} != arena "
+            f"{None if host is None else host.shape} for L{level} {name!r}"
+        )
+        self._dev[key] = value
+        self._dev_newer.add(key)
+
+    def drop(self, name: str | None = None, level: int | None = None) -> None:
+        """Forget device copies (after a host-side write made them stale)."""
+        self._sync_version()
+        for key in [
+            k
+            for k in self._dev
+            if (name is None or k[1] == name) and (level is None or k[0] == level)
+        ]:
+            assert key not in self._dev_newer, (
+                f"host write raced a pending device update for {key}: flush() "
+                "before mutating host buffers the device owns"
+            )
+            del self._dev[key]
+
+    def check_no_pending(self) -> None:
+        """Assert no un-flushed device-newer state exists (called by
+        ``LevelArena.adopt`` so a missing flush fails loudly instead of
+        silently discarding computed steps)."""
+        assert not self._dev_newer, (
+            f"device-newer state pending for {sorted(self._dev_newer)}: "
+            "flush() before rebinding/adopting the arena"
+        )
+
+    def flush(self) -> None:
+        """Materialize host views: download every device-newer buffer into
+        its arena storage in place (block views stay bound)."""
+        self._sync_version()
+        for key in sorted(self._dev_newer):
+            level, name = key
+            host = self.arena.buffer(level, name)
+            np.copyto(host, np.asarray(self._dev[key]))
+            self.d2h_transfers += 1
+            self.d2h_bytes += host.nbytes
+        self._dev_newer.clear()
 
 
 class RankArenas:

@@ -43,7 +43,6 @@ class VelocityGradientCriterion:
     def cell_indicator(self, blk: Block) -> np.ndarray:
         pdf = blk.data["pdf"]
         mask = blk.data["mask"]
-        g = self.spec.ghost
         _rho, u = macroscopic(pdf, self.spec.lattice)
         u = u * (mask == CellType.FLUID)[None]
         s = np.zeros(u.shape[1:], dtype=np.float64)
@@ -51,7 +50,7 @@ class VelocityGradientCriterion:
             for ax in (1, 2, 3):  # gradient direction
                 grad = np.abs(np.diff(u[d], axis=ax - 1, append=np.take(u[d], [-1], axis=ax - 1)))
                 s += grad
-        return s[g:-g, g:-g, g:-g]
+        return self.spec.interior(s)
 
     def __call__(self, _rank: int, blocks: Mapping[int, Block]) -> dict[int, int]:
         out: dict[int, int] = {}

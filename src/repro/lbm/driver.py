@@ -15,26 +15,37 @@ exchange) with the control plane (the four-step AMR pipeline):
 
 Stepping modes (``LidDrivenCavityConfig.stepping_mode``):
 
-* ``"arena"`` (default) — blocks live in persistent per-level
-  :class:`~repro.core.fields.LevelArena` buffers; every ``Block.data`` entry
-  is a zero-copy view, ghost exchange writes into the buffers in place, and
-  the kernel's arena entry point steps a whole level per call with no
-  per-substep ``np.stack``/copy-out. Device masks are cached per level and
-  only re-uploaded after AMR events.
-* ``"sharded"`` — the rank-sharded data plane: each simulated rank owns its
-  own per-level :class:`~repro.core.fields.RankArenas` buffers holding only
-  locally-owned blocks; intra-rank ghost faces copy in place while
-  cross-rank faces travel as point-to-point messages over the
-  :class:`~repro.core.Comm` fabric (one batched message per neighboring
-  rank pair, sender-side resampling). Each rank's buffers are stepped
-  independently — one kernel call per rank per level, batched across ranks
-  whose buffer shapes agree — and arenas are rebuilt per rank after
-  migration/refine/coarsen instead of restacking globally. Data-plane
-  traffic is attributed in :attr:`AMRLBM.data_stats` ("halo"/"step")
-  alongside the control-plane per-stage counters.
-* ``"restack"`` — the seed behavior (stack all blocks of a level into a
-  fresh array every substep, copy results back out per block), kept as the
-  baseline for the ``stepping`` benchmark.
+==============  ================================================================
+mode            data plane per coarse step
+==============  ================================================================
+``"fused"``     device-resident: the whole ``2^lmax`` substep cycle — per-level
+                activity masks, compiled ghost exchange, stream+collide — is
+                one jitted program over persistent device buffers
+                (:meth:`~repro.core.fields.LevelArena.device`). Zero host
+                transfers between AMR events; host views are rematerialized
+                on demand for diagnostics/migration/checkpointing.
+``"arena"``     persistent per-level :class:`~repro.core.fields.LevelArena`
+(default)       host buffers; every ``Block.data`` entry is a zero-copy view,
+                ghost exchange writes in place (numpy), and the kernel's
+                arena entry point steps a whole level per call — but each
+                substep still round-trips host<->device once per level.
+``"sharded"``   the rank-sharded data plane: one
+                :class:`~repro.core.fields.RankArenas` arena per simulated
+                rank holding only locally-owned blocks; intra-rank ghost
+                faces copy in place, cross-rank faces travel as batched p2p
+                messages over :class:`~repro.core.Comm` (sender-side
+                resampling); one kernel call per rank per level, batched
+                across ranks with equal block counts.
+``"restack"``   the seed behavior (stack all blocks of a level into a fresh
+                array every substep, copy results back out per block) — the
+                benchmark baseline.
+==============  ================================================================
+
+Data-plane traffic is attributed in :attr:`AMRLBM.data_stats`: host modes
+fill ``"halo"`` / ``"step"``; the fused path cannot split its in-program
+exchange from its stepping, so it reports wall time plus in-program exchange
+rounds under ``"fused"`` (host<->device transfer counts live on the arena's
+:class:`~repro.core.fields.DeviceResidency`).
 """
 
 from __future__ import annotations
@@ -59,11 +70,15 @@ from ..core import (
 )
 from ..core.forest import Block, BlockForest
 from ..core.pipeline import StageStats
-from ..kernels.lbm_collide.ops import make_arena_stream_collide, make_stream_collide
+from ..kernels.lbm_collide.ops import (
+    make_arena_stream_collide,
+    make_fused_superstep,
+    make_stream_collide,
+)
 from ..kernels.lbm_collide.ref import equilibrium
 from .criteria import VelocityGradientCriterion, macroscopic
 from .grid import CellType, LBMBlockSpec, block_world_box, make_lbm_fields
-from .halo import fill_ghost_layers, fill_ghost_layers_sharded
+from .halo import compile_ghost_plan, fill_ghost_layers, fill_ghost_layers_sharded
 from .lattice import D3Q19, omega_for_level
 
 __all__ = ["LidDrivenCavityConfig", "AMRLBM"]
@@ -73,6 +88,7 @@ __all__ = ["LidDrivenCavityConfig", "AMRLBM"]
 class LidDrivenCavityConfig:
     root_grid: tuple[int, int, int] = (2, 2, 2)
     cells_per_block: tuple[int, int, int] = (8, 8, 8)
+    ghost: int = 1
     nranks: int = 4
     omega: float = 1.6
     u_lid: tuple[float, float, float] = (0.05, 0.0, 0.0)
@@ -82,7 +98,7 @@ class LidDrivenCavityConfig:
     refine_lower: float = 0.015
     balancer: str = "diffusion-pushpull"  # | "diffusion-push" | "morton" | "hilbert"
     kernel_backend: str = "pallas"
-    stepping_mode: str = "arena"  # | "sharded" (per-rank) | "restack" (seed)
+    stepping_mode: str = "arena"  # | "fused" (device) | "sharded" (per-rank) | "restack" (seed)
     obstacle_fn: Callable[[np.ndarray], np.ndarray] | None = None  # (N,3)->bool
 
 
@@ -101,16 +117,27 @@ def _make_balancer(name: str):
 class AMRLBM:
     def __init__(self, cfg: LidDrivenCavityConfig):
         self.cfg = cfg
-        assert cfg.stepping_mode in ("arena", "sharded", "restack"), cfg.stepping_mode
-        for n in cfg.cells_per_block:  # power-of-two cells keep halo regions
-            assert n & (n - 1) == 0, "cells_per_block must be powers of two"
-        self.spec = LBMBlockSpec(cells=cfg.cells_per_block, lattice=D3Q19)
+        assert cfg.stepping_mode in ("arena", "fused", "sharded", "restack"), (
+            cfg.stepping_mode
+        )
+        for n in cfg.cells_per_block:
+            # the real invariant (shared with FieldRegistry and ghost_regions):
+            # even cells keep octant splits and 2:1 halo regions cell-aligned;
+            # powers of two are NOT required
+            assert n > 0 and n % 2 == 0, (
+                "cells per block must be even (octant split + halo alignment)"
+            )
+        self.spec = LBMBlockSpec(
+            cells=cfg.cells_per_block, ghost=cfg.ghost, lattice=D3Q19
+        )
         self.geom = ForestGeometry(root_grid=cfg.root_grid, max_level=12)
         self.fields = make_lbm_fields(self.spec)
         self.registry = self.fields  # typed registry drives all subsystems
         # restack mode never reads SoA buffers — don't pay for keeping them
         self.arena: LevelArena | None = (
-            LevelArena(self.fields) if cfg.stepping_mode == "arena" else None
+            LevelArena(self.fields)
+            if cfg.stepping_mode in ("arena", "fused")
+            else None
         )
         # sharded mode: one rank-local arena set per simulated rank
         self.arenas: RankArenas | None = (
@@ -138,11 +165,18 @@ class AMRLBM:
             {} if (self.arena is not None or self.arenas is not None) else None
         )
         self._cache_version = -1  # last arena.version the caches were built for
+        # fused superstep program cache: (arena version, level tuple) -> fn
+        self._fused_fn = None
+        self._fused_key: tuple | None = None
+        self._fused_steppers: dict[int, Callable] = {}
         # data-plane stage attribution (sharded halo bytes/rounds live here,
-        # mirroring the control plane's CycleReport.stages)
+        # mirroring the control plane's CycleReport.stages); the fused path
+        # reports its single-program wall time + in-program exchange rounds
+        # under "fused" (halo and step are indistinguishable on device)
         self.data_stats: dict[str, StageStats] = {
             "halo": StageStats(),
             "step": StageStats(),
+            "fused": StageStats(),
         }
         for blk in self.forest.all_blocks():
             self._init_block(blk)
@@ -194,25 +228,41 @@ class AMRLBM:
                 mask[obst & (mask == 0)] = CellType.WALL
             blk.data["mask"][...] = mask
         self._mask_dev.clear()
+        if self.arena is not None:
+            # host-side write: device mask copies (and the fused program that
+            # baked them in) are stale
+            self.arena.device().drop(name="mask")
+            self._fused_fn = None
+            self._fused_key = None
 
     # -- stepping ---------------------------------------------------------------
+    def _stepper_kwargs(self, level: int) -> dict:
+        return dict(
+            omega=omega_for_level(self.cfg.omega, level),
+            lattice=self.spec.lattice,
+            u_wall=self.cfg.u_lid,
+            collision=self.cfg.collision,
+            backend=self.cfg.kernel_backend,
+            interpret=True,
+        )
+
     def _stepper(self, level: int) -> Callable:
         if level not in self._steppers:
-            kw = dict(
-                omega=omega_for_level(self.cfg.omega, level),
-                lattice=self.spec.lattice,
-                u_wall=self.cfg.u_lid,
-                collision=self.cfg.collision,
-                backend=self.cfg.kernel_backend,
-                interpret=True,
-            )
             make = (
                 make_stream_collide
                 if self.cfg.stepping_mode == "restack"
                 else make_arena_stream_collide
             )
-            self._steppers[level] = make(**kw)
+            self._steppers[level] = make(**self._stepper_kwargs(level))
         return self._steppers[level]
+
+    def _fused_stepper(self, level: int) -> Callable:
+        """Pure ``step(f, mask) -> f`` for the fused program (traced inline)."""
+        if level not in self._fused_steppers:
+            self._fused_steppers[level] = make_stream_collide(
+                **self._stepper_kwargs(level)
+            )
+        return self._fused_steppers[level]
 
     def _storage_version(self) -> int:
         if self.arena is not None:
@@ -303,6 +353,10 @@ class AMRLBM:
         wall time (and, in sharded mode, the p2p bytes/messages/rounds the
         exchange put on the fabric) to the "halo" data-plane stage."""
         self._sync_caches()  # an external adopt() must not replay stale plans
+        # arena storage is versioned (adopt bumps it on every topology /
+        # storage change), so the plan-cache guard is an O(1) token compare
+        # instead of the default O(blocks) binding scan
+        token = self._storage_version() if self._halo_plans is not None else None
         t0 = time.perf_counter()
         if self.cfg.stepping_mode == "sharded":
             s0 = self.comm.stats.summary()
@@ -313,6 +367,7 @@ class AMRLBM:
                 fields=("pdf",),
                 levels=active,
                 plan_cache=self._halo_plans,
+                cache_token=token,
             )
             self.data_stats["halo"].add(
                 StageStats.delta(
@@ -326,12 +381,82 @@ class AMRLBM:
             fields=("pdf",),
             levels=active,
             plan_cache=self._halo_plans,
+            cache_token=token,
         )
         self.data_stats["halo"].add(StageStats(seconds=time.perf_counter() - t0))
+
+    # -- fused (device-resident) stepping ---------------------------------------
+    def _fused_program(self) -> tuple[Callable, tuple[int, ...]]:
+        """Get-or-build the jitted superstep for the current forest: compiled
+        ghost plans for every activity pattern + per-level steppers + device
+        masks, cached until the next AMR event (arena version) or mask
+        refresh."""
+        levels = tuple(sorted(self.forest.levels_in_use()))
+        key = (self.arena.version, levels)
+        if self._fused_fn is not None and self._fused_key == key:
+            return self._fused_fn, levels
+        lmax = levels[-1]
+        slots = {l: self.arena.slots(l) for l in levels}
+        plans = {
+            p: compile_ghost_plan(
+                self.forest,
+                self.fields,
+                slots,
+                fields=("pdf",),
+                levels={l for l in levels if l >= lmax - p},
+            )
+            for p in range(lmax + 1)
+        }
+        res = self.arena.device()
+        self._fused_fn = make_fused_superstep(
+            levels=levels,
+            plans=plans,
+            steppers={l: self._fused_stepper(l) for l in levels},
+            masks={l: res.fetch(l, "mask") for l in levels},
+        )
+        self._fused_key = key
+        return self._fused_fn, levels
+
+    def _advance_fused(self, coarse_steps: int) -> None:
+        """Run whole coarse steps on device: one program call each, zero host
+        transfers in steady state (uploads only after AMR events / mask
+        refreshes; downloads only when diagnostics or the control plane
+        materialize host views)."""
+        fn, levels = self._fused_program()
+        res = self.arena.device()
+        pdfs = tuple(res.fetch(l, "pdf") for l in levels)
+        nsub = 1 << levels[-1]
+        t0 = time.perf_counter()
+        for _ in range(coarse_steps):
+            pdfs = fn(pdfs)
+        jax.block_until_ready(pdfs)
+        for l, arr in zip(levels, pdfs):
+            res.store(l, "pdf", arr)
+        self.data_stats["fused"].add(
+            StageStats(
+                seconds=time.perf_counter() - t0,
+                exchange_rounds=coarse_steps * nsub,
+            )
+        )
+        self.coarse_step += coarse_steps
+
+    def materialize_host(self) -> None:
+        """Flush device-newer buffers into the host arena (fused mode) so
+        every ``Block.data`` view is current. Diagnostics and :meth:`adapt`
+        call this automatically; external consumers of per-block host data —
+        ``save_checkpoint``, the resilience manager, visualization — must
+        call it before reading when stepping in fused mode (no-op in the
+        host-resident modes)."""
+        if self.arena is not None:
+            self.arena.device().flush()
+
 
     def advance(self, coarse_steps: int = 1) -> None:
         """Advance by coarse time steps with per-level substepping."""
         self._sync_caches()
+        if self.cfg.stepping_mode == "fused":
+            self._advance_fused(coarse_steps)
+            return
         levels = self.forest.levels_in_use()
         lmax = max(levels)
         for _ in range(coarse_steps):
@@ -349,6 +474,7 @@ class AMRLBM:
     # -- AMR ------------------------------------------------------------------
     def adapt(self, force_rebalance: bool = False):
         """Evaluate the refinement criterion and run one AMR cycle."""
+        self.materialize_host()  # criterion + migration read host views
         self.forest, report = self.pipeline.run_cycle(
             self.forest, self.comm, self.criterion, force_rebalance=force_rebalance
         )
@@ -370,31 +496,34 @@ class AMRLBM:
                 self.adapt()
 
     # -- diagnostics -----------------------------------------------------------
+    def _interior(self, arr: np.ndarray) -> np.ndarray:
+        """Interior (non-ghost) slice of a per-block array (ghost-0 safe)."""
+        return self.spec.interior(arr)
+
     def total_mass(self) -> float:
-        g = self.spec.ghost
+        self.materialize_host()
         total = 0.0
         for b in self.forest.all_blocks():
-            interior = b.data["pdf"][:, g:-g, g:-g, g:-g]
-            fluid = (b.data["mask"][g:-g, g:-g, g:-g] == CellType.FLUID)
+            interior = self._interior(b.data["pdf"])
+            fluid = self._interior(b.data["mask"]) == CellType.FLUID
             # level-l cells have volume 8^-l of a root-cell unit
             total += float((interior.sum(axis=0) * fluid).sum()) * (8.0 ** -b.level)
         return total
 
     def max_velocity(self) -> float:
+        self.materialize_host()
         vmax = 0.0
-        g = self.spec.ghost
         for b in self.forest.all_blocks():
             _rho, u = macroscopic(b.data["pdf"], self.spec.lattice)
             fluid = b.data["mask"] == CellType.FLUID
             speed = np.sqrt((u**2).sum(axis=0)) * fluid
-            vmax = max(vmax, float(speed[g:-g, g:-g, g:-g].max(initial=0.0)))
+            vmax = max(vmax, float(self._interior(speed).max(initial=0.0)))
         return vmax
 
     def num_fluid_cells(self) -> int:
-        g = self.spec.ghost
         return int(
             sum(
-                (b.data["mask"][g:-g, g:-g, g:-g] == CellType.FLUID).sum()
+                (self._interior(b.data["mask"]) == CellType.FLUID).sum()
                 for b in self.forest.all_blocks()
             )
         )

@@ -65,7 +65,9 @@ class LBMBlockSpec:
 
     def interior(self, arr: np.ndarray) -> np.ndarray:
         g = self.ghost
-        return arr[..., g:-g, g:-g, g:-g]
+        # explicit bounds: arr[g:-g] with g == 0 would be silently empty
+        sl = tuple(slice(g, n - g) for n in arr.shape[-3:])
+        return arr[(Ellipsis, *sl)]
 
 
 def block_world_box(geom: ForestGeometry, bid: int) -> tuple[np.ndarray, np.ndarray]:
