@@ -1,0 +1,52 @@
+"""CI guard for the BENCH_particles.json trajectory.
+
+Fails (exit 1) when a particles benchmark run did not actually append to the
+trajectory, or when an appended entry's schema drifted from the pinned
+contract. Shared engine: :mod:`benchmarks.trajcheck`. Usage (see
+.github/workflows/ci.yml):
+
+    N=$(python -m benchmarks.check_particles --count)
+    python -m benchmarks.run --only particles --quick
+    python -m benchmarks.check_particles --prev-count "$N" --min-new 2
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from .trajcheck import run_check
+
+TRAJ = Path(__file__).resolve().parents[1] / "BENCH_particles.json"
+
+SCHEMA: dict[str, type | tuple[type, ...]] = {
+    "scenario": str,
+    "quick": bool,
+    "mode": str,
+    "nranks": int,
+    "coarse_steps": int,
+    "num_particles": int,
+    "particles_per_s": (int, float),
+    "redist_p2p_bytes_per_step": int,
+    "moved_per_step": (int, float),
+}
+MODES = ("arena", "sharded")
+
+
+def _check_extra(i: int, entry: dict) -> list[str]:
+    errs = []
+    if entry.get("mode") not in MODES:
+        errs.append(f"entry {i}: mode {entry.get('mode')!r} not in {MODES}")
+    if isinstance(entry.get("num_particles"), int) and entry["num_particles"] <= 0:
+        errs.append(f"entry {i}: num_particles must be positive")
+    return errs
+
+
+def main() -> None:
+    run_check(
+        prog="check_particles", traj_path=TRAJ, schema=SCHEMA,
+        check_extra=_check_extra,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,8 @@
 Fails (exit 1) when a benchmark run did not actually append to the
 trajectory, or when an appended entry's schema drifted from the pinned
 contract — silent schema drift would make the committed trajectory
-incomparable across PRs. Usage (see .github/workflows/ci.yml):
+incomparable across PRs. Shared engine: :mod:`benchmarks.trajcheck`. Usage
+(see .github/workflows/ci.yml):
 
     N=$(python -m benchmarks.check_stepping --count)
     python -m benchmarks.run --only stepping --quick ...
@@ -12,10 +13,9 @@ incomparable across PRs. Usage (see .github/workflows/ci.yml):
 
 from __future__ import annotations
 
-import argparse
-import json
-import sys
 from pathlib import Path
+
+from .trajcheck import run_check
 
 TRAJ = Path(__file__).resolve().parents[1] / "BENCH_stepping.json"
 
@@ -37,28 +37,8 @@ SCHEMA: dict[str, type | tuple[type, ...]] = {
 MODES = ("restack", "arena", "fused", "sharded")
 
 
-def _load(*, missing_ok: bool = False) -> list:
-    if missing_ok and not TRAJ.exists():
-        return []  # a deleted trajectory is a legitimate reset; count is 0
-    try:
-        traj = json.loads(TRAJ.read_text())
-    except (OSError, ValueError) as e:
-        sys.exit(f"check_stepping: cannot read {TRAJ.name}: {e}")
-    if not isinstance(traj, list):
-        sys.exit(f"check_stepping: {TRAJ.name} is not a list")
-    return traj
-
-
-def _check_entry(i: int, entry: dict) -> list[str]:
+def _check_extra(i: int, entry: dict) -> list[str]:
     errs = []
-    for key, want in SCHEMA.items():
-        if key not in entry:
-            errs.append(f"entry {i}: missing key {key!r}")
-        elif not isinstance(entry[key], want):
-            errs.append(
-                f"entry {i}: {key!r} has type {type(entry[key]).__name__}, "
-                f"expected {want}"
-            )
     for mode in MODES:
         bps = entry.get("blocks_per_s")
         if isinstance(bps, dict) and not isinstance(bps.get(mode), (int, float)):
@@ -67,33 +47,10 @@ def _check_entry(i: int, entry: dict) -> list[str]:
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--count", action="store_true",
-                    help="print the current entry count and exit")
-    ap.add_argument("--prev-count", type=int, default=None,
-                    help="entry count before the benchmark ran")
-    ap.add_argument("--min-new", type=int, default=1,
-                    help="minimum entries the run must have appended")
-    args = ap.parse_args()
-    if args.count:
-        print(len(_load(missing_ok=True)))
-        return
-    traj = _load()
-    if args.prev_count is None:
-        sys.exit("check_stepping: --prev-count is required (or use --count)")
-    new = traj[args.prev_count:]
-    if len(new) < args.min_new:
-        sys.exit(
-            f"check_stepping: benchmark appended {len(new)} entries "
-            f"(< {args.min_new}): the stepping run did not record results"
-        )
-    # legacy entries predate some keys; only *new* entries must match the
-    # full contract
-    errs = [e for i, entry in enumerate(new, start=args.prev_count)
-            for e in _check_entry(i, entry)]
-    if errs:
-        sys.exit("check_stepping: schema drift:\n  " + "\n  ".join(errs))
-    print(f"check_stepping: OK ({len(new)} new entries, schema intact)")
+    run_check(
+        prog="check_stepping", traj_path=TRAJ, schema=SCHEMA,
+        check_extra=_check_extra,
+    )
 
 
 if __name__ == "__main__":

@@ -17,6 +17,9 @@ Mapping to the paper:
                      rank-sharded data plane: blocks/s of the full
                      substepping loop, best-of-k timed, swept over --ranks,
                      appended to the BENCH_stepping.json trajectory
+  particles          Lagrangian tracer layer: particles/s advected (RK2 +
+                     redistribution) per stepping mode + redistribution p2p
+                     bytes per step, appended to BENCH_particles.json
   roofline           §Roofline: renders the dry-run artifact table
 """
 
@@ -208,9 +211,6 @@ def stepping(
 
     Single runs on a shared host are noise-bound (observed ~1.6x swings), so
     every timing is best-of-``best_of`` (default 2 quick / 3 full)."""
-    import json
-    from pathlib import Path
-
     from repro.lbm import AMRLBM, LidDrivenCavityConfig
 
     coarse = steps if steps is not None else (2 if quick else 4)
@@ -285,7 +285,17 @@ def stepping(
                 "sharded_halo_p2p_bytes_per_step": halo_bytes["sharded"],
             }
         )
-    traj_path = Path(__file__).resolve().parents[1] / "BENCH_stepping.json"
+    _append_trajectory("stepping", "BENCH_stepping.json", traj_entries)
+
+
+def _append_trajectory(bench: str, filename: str, entries: list[dict]) -> None:
+    """Append entries to a committed JSON trajectory (atomic, corruption-safe
+    — same protocol as the stepping trajectory). Warnings are reported under
+    ``bench`` in the name column, like every other row the bench emits."""
+    import json
+    from pathlib import Path
+
+    traj_path = Path(__file__).resolve().parents[1] / filename
     try:
         traj = json.loads(traj_path.read_text())
         if not isinstance(traj, list):
@@ -295,12 +305,76 @@ def stepping(
     except ValueError:  # corrupt/partial/wrong shape: preserve aside, don't wipe
         bad = traj_path.with_suffix(".json.corrupt")
         traj_path.replace(bad)
-        _csv("stepping", "trajectory_warning", f"unreadable, moved to {bad.name}")
+        _csv(bench, "trajectory_warning", f"unreadable, moved to {bad.name}")
         traj = []
-    traj.extend(traj_entries)
+    traj.extend(entries)
     tmp = traj_path.with_suffix(".json.tmp")
     tmp.write_text(json.dumps(traj, indent=2) + "\n")
     tmp.replace(traj_path)  # atomic: a killed run can't truncate the trajectory
+
+
+def particles(quick: bool = False) -> None:
+    """Lagrangian tracer throughput: particles advected per second (trilinear
+    RK2 + redistribution, the whole data_stats["particles"] stage) per
+    stepping mode, plus redistribution p2p bytes and block moves per coarse
+    step. Tracers are clustered under the lid so the run exercises the
+    heterogeneous cells + alpha*N load model and real redistribution."""
+    from repro.lbm import AMRLBM, LidDrivenCavityConfig
+    from repro.particles import ParticlesConfig
+
+    per_block = 64 if quick else 256
+    coarse = 2 if quick else 4
+    nranks = 4
+    traj_entries = []
+    for mode in ("arena", "sharded"):
+        cfg = LidDrivenCavityConfig(
+            root_grid=(2, 2, 2),
+            cells_per_block=(8, 8, 8),
+            nranks=nranks,
+            omega=1.5,
+            u_lid=(0.08, 0.0, 0.0),
+            max_level=1,
+            refine_upper=0.03,
+            refine_lower=0.004,
+            stepping_mode=mode,
+            kernel_backend="ref",
+            particles=ParticlesConfig(
+                per_block=per_block,
+                seed=1,
+                alpha=0.05,
+                region=((0.0, 0.0, 1.5), (2.0, 2.0, 2.0)),
+            ),
+        )
+        sim = AMRLBM(cfg)
+        sim.advance(1)  # warm up steppers + the advection kernel jit
+        sim.adapt()  # develop the two-level structure
+        sim.advance(1)
+        n = sim.total_particles()
+        st = sim.data_stats["particles"]
+        t0, b0, m0 = st.seconds, st.p2p_bytes, sim.particles_moved
+        sim.advance(coarse)
+        dt = st.seconds - t0
+        pps = n * coarse / max(dt, 1e-9)
+        redist_bytes = (st.p2p_bytes - b0) // coarse
+        moved = (sim.particles_moved - m0) / coarse
+        _csv(f"particles/{mode}", "num_particles", n)
+        _csv(f"particles/{mode}", "particles_per_s", round(pps, 1))
+        _csv(f"particles/{mode}", "redist_p2p_bytes_per_step", redist_bytes)
+        _csv(f"particles/{mode}", "moved_per_step", round(moved, 2))
+        traj_entries.append(
+            {
+                "scenario": "lid-driven-cavity-tracers",
+                "quick": quick,
+                "mode": mode,
+                "nranks": nranks,
+                "coarse_steps": coarse,
+                "num_particles": n,
+                "particles_per_s": round(pps, 1),
+                "redist_p2p_bytes_per_step": int(redist_bytes),
+                "moved_per_step": round(moved, 2),
+            }
+        )
+    _append_trajectory("particles", "BENCH_particles.json", traj_entries)
 
 
 def roofline(quick: bool = False) -> None:
@@ -333,6 +407,7 @@ ALL = {
     "migration_volume": migration_volume,
     "lbm_mlups": lbm_mlups,
     "stepping": stepping,
+    "particles": particles,
     "roofline": roofline,
 }
 

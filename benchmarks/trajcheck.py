@@ -1,0 +1,87 @@
+"""Shared engine for the committed benchmark-trajectory CI guards.
+
+Each guarded trajectory (``BENCH_stepping.json``, ``BENCH_particles.json``)
+gets a thin CLI wrapper (``check_stepping.py`` / ``check_particles.py``)
+that supplies its path, pinned entry schema, and any extra per-entry rules;
+the load/count/append/schema semantics live here exactly once, so the
+guards cannot drift apart. Protocol (see .github/workflows/ci.yml):
+
+    N=$(python -m benchmarks.check_<name> --count)
+    python -m benchmarks.run --only <name> ...
+    python -m benchmarks.check_<name> --prev-count "$N" --min-new K
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Callable
+
+
+def _load(prog: str, traj_path: Path, *, missing_ok: bool = False) -> list:
+    if missing_ok and not traj_path.exists():
+        return []  # a deleted trajectory is a legitimate reset; count is 0
+    try:
+        traj = json.loads(traj_path.read_text())
+    except (OSError, ValueError) as e:
+        sys.exit(f"{prog}: cannot read {traj_path.name}: {e}")
+    if not isinstance(traj, list):
+        sys.exit(f"{prog}: {traj_path.name} is not a list")
+    return traj
+
+
+def check_schema(i: int, entry: dict, schema: dict) -> list[str]:
+    errs = []
+    for key, want in schema.items():
+        if key not in entry:
+            errs.append(f"entry {i}: missing key {key!r}")
+        elif not isinstance(entry[key], want):
+            errs.append(
+                f"entry {i}: {key!r} has type {type(entry[key]).__name__}, "
+                f"expected {want}"
+            )
+    return errs
+
+
+def run_check(
+    *,
+    prog: str,
+    traj_path: Path,
+    schema: dict,
+    check_extra: Callable[[int, dict], list[str]] | None = None,
+) -> None:
+    """Parse the shared CLI and enforce the append + schema contract.
+
+    Only entries appended after ``--prev-count`` are validated — legacy
+    entries may predate schema keys."""
+    ap = argparse.ArgumentParser(prog=prog)
+    ap.add_argument("--count", action="store_true",
+                    help="print the current entry count and exit")
+    ap.add_argument("--prev-count", type=int, default=None,
+                    help="entry count before the benchmark ran")
+    ap.add_argument("--min-new", type=int, default=1,
+                    help="minimum entries the run must have appended")
+    args = ap.parse_args()
+    if args.count:
+        print(len(_load(prog, traj_path, missing_ok=True)))
+        return
+    traj = _load(prog, traj_path)
+    if args.prev_count is None:
+        sys.exit(f"{prog}: --prev-count is required (or use --count)")
+    new = traj[args.prev_count:]
+    if len(new) < args.min_new:
+        sys.exit(
+            f"{prog}: benchmark appended {len(new)} entries "
+            f"(< {args.min_new}): the run did not record results"
+        )
+    errs = [
+        e
+        for i, entry in enumerate(new, start=args.prev_count)
+        for e in check_schema(i, entry, schema)
+        + (check_extra(i, entry) if check_extra else [])
+    ]
+    if errs:
+        sys.exit(f"{prog}: schema drift:\n  " + "\n  ".join(errs))
+    print(f"{prog}: OK ({len(new)} new entries, schema intact)")

@@ -14,7 +14,7 @@ from .refine import mark_and_balance_targets
 from .proxy import build_proxy, migrate_proxy_blocks
 from .migration import BlockDataItem, BlockDataRegistry, migrate_data
 from .fields import DeviceResidency, FieldRegistry, FieldSpec, LevelArena, RankArenas
-from .pipeline import AMRPipeline, CycleReport
+from .pipeline import AMRPipeline, CycleReport, recompute_weights
 from .balancing import DiffusionBalancer, SFCBalancer
 
 __all__ = [
@@ -39,6 +39,7 @@ __all__ = [
     "migrate_data",
     "AMRPipeline",
     "CycleReport",
+    "recompute_weights",
     "DiffusionBalancer",
     "SFCBalancer",
 ]

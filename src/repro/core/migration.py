@@ -34,16 +34,33 @@ __all__ = ["BlockDataItem", "BlockDataRegistry", "migrate_data"]
 
 
 def payload_nbytes(obj: Any) -> int:
+    """Exact serialized size of a payload in the fabric's byte accounting.
+
+    Containers are sized recursively — including *ragged* structures such as
+    dict-of-ndarray particle sets, where every array has its own length — and
+    dict keys are counted (a real wire format ships them). Numpy scalars are
+    their itemsize, python scalars the fixed-width convention below. Only
+    genuinely opaque objects fall back to their pickled size; nothing falls
+    through to a flat guess, so migration byte counts for arbitrary §2.5
+    payloads (the Table-1 quantities) are exact."""
     if obj is None:
         return 0
     if isinstance(obj, np.ndarray):
         return obj.nbytes
+    if isinstance(obj, np.generic):  # numpy scalar: its in-memory width
+        return obj.dtype.itemsize
+    if isinstance(obj, bool):
+        return 1
+    if isinstance(obj, (int, float, complex)):
+        return 16 if isinstance(obj, complex) else 8
+    if isinstance(obj, str):
+        return len(obj.encode())
     if isinstance(obj, (bytes, bytearray)):
         return len(obj)
-    if isinstance(obj, (list, tuple)):
+    if isinstance(obj, (list, tuple, set, frozenset)):
         return sum(payload_nbytes(o) for o in obj)
     if isinstance(obj, dict):
-        return sum(payload_nbytes(o) for o in obj.values())
+        return sum(payload_nbytes(k) + payload_nbytes(v) for k, v in obj.items())
     try:
         return len(pickle.dumps(obj))
     except Exception:

@@ -15,16 +15,41 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, Callable
 
 from .balancing.base import Balancer
 from .comm import Comm
-from .forest import BlockForest
+from .forest import Block, BlockForest
 from .migration import BlockDataRegistry, migrate_data
 from .proxy import ProxyWeightFn, build_proxy, migrate_proxy_blocks
 from .refine import MarkCallback, mark_and_balance_targets
 
-__all__ = ["AMRPipeline", "CycleReport"]
+__all__ = ["AMRPipeline", "CycleReport", "BlockWeightFn", "recompute_weights"]
+
+# per-block weight callback evaluated on *actual* blocks (with their data):
+# the paper's "block weights must be reevaluated" hook. Unlike ProxyWeightFn
+# it sees the block's simulation payloads, so data-dependent load models
+# (fluid-cell counts §3.2, particle counts) are expressible directly.
+BlockWeightFn = Callable[[Block], float]
+
+
+def recompute_weights(forest: BlockForest, weight_fn: BlockWeightFn) -> int:
+    """Reevaluate every block's weight from its current data (process-local,
+    no communication). Returns the number of blocks whose weight changed.
+
+    The pipeline calls this automatically when ``block_weight_fn`` is set:
+    once before each cycle (so the proxy is balanced against fresh loads) and
+    once after data migration (so refined/coarsened/migrated blocks carry
+    weights derived from their *actual* post-cycle data instead of whatever
+    the proxy estimated — without this, new blocks keep their construction
+    weight until the next reevaluation)."""
+    changed = 0
+    for b in forest.all_blocks():
+        w = float(weight_fn(b))
+        if w != b.weight:
+            b.weight = w
+            changed += 1
+    return changed
 
 
 @dataclass
@@ -77,6 +102,9 @@ class AMRPipeline:
     balancer: Balancer
     registry: BlockDataRegistry
     weight_fn: ProxyWeightFn | None = None
+    # data-dependent load model, reevaluated on the actual forest before each
+    # balancing cycle and again after migration (see recompute_weights)
+    block_weight_fn: BlockWeightFn | None = None
 
     def run_cycle(
         self,
@@ -92,6 +120,11 @@ class AMRPipeline:
         report = CycleReport()
         current = forest
         for _cycle in range(max_cycles):
+            # ---- step 0: reevaluate data-dependent block weights ------------
+            # (later cycles are already covered by the post-migration call)
+            if self.block_weight_fn is not None and _cycle == 0:
+                recompute_weights(current, self.block_weight_fn)
+
             # ---- step 1: block-level refinement (+ 2:1) ---------------------
             t0 = time.perf_counter()
             s0 = comm.stats.summary()
@@ -139,6 +172,10 @@ class AMRPipeline:
             )
             # proxy is destroyed here (temporary structure, paper Fig. 6)
             del proxy
+            # new blocks now hold their actual data: re-derive their weights
+            # from the callback (split/merge proxy weights were estimates)
+            if self.block_weight_fn is not None:
+                recompute_weights(current, self.block_weight_fn)
             force_rebalance = False
             mark_fn = mark_fn if max_cycles > 1 else None
         return current, report

@@ -34,13 +34,20 @@ from .forest import Block, BlockForest
 __all__ = ["build_proxy", "migrate_proxy_blocks", "ProxyWeightFn"]
 
 # weight callback: (old actual block, kind, new bid) -> proxy block weight.
-# Default: unit weight per block — for the LBM every block stores a grid of
-# the same size (paper §3.2), so all blocks generate the same workload.
 ProxyWeightFn = Callable[[Block, str, int], float]
 
 
-def _default_weight(_old: Block, _kind: str, _new_bid: int) -> float:
-    return 1.0
+def _default_weight(old: Block, _kind: str, _new_bid: int) -> float:
+    """Propagate the actual block's weight onto its proxy successor(s).
+
+    Per-block cost model (paper §3.2: every block stores a grid of the same
+    size, so cost is per *block*): split children inherit the parent's
+    weight, a merged block the designated sibling's. The old default returned
+    a hardcoded 1.0, which silently reset every custom weight — even on
+    plain keeps — on each AMR cycle; callers with additive weight semantics
+    (e.g. particle counts) should install an explicit weight callback (see
+    ``AMRPipeline.block_weight_fn`` / ``repro.particles.balance``)."""
+    return old.weight
 
 
 def build_proxy(

@@ -46,6 +46,17 @@ fill ``"halo"`` / ``"step"``; the fused path cannot split its in-program
 exchange from its stepping, so it reports wall time plus in-program exchange
 rounds under ``"fused"`` (host<->device transfer counts live on the arena's
 :class:`~repro.core.fields.DeviceResidency`).
+
+With ``particles=ParticlesConfig(...)`` a Lagrangian tracer layer rides the
+forest (see :mod:`repro.particles` and the README support matrix): once per
+coarse step the tracers advect through the block-local velocity field (RK2,
+trilinear) and redistribute to their new block/rank over the ``Comm`` fabric
+(attributed under ``data_stats["particles"]``). All four stepping modes are
+supported — restack/arena advect per level over host stacks, sharded runs
+one batch per rank over that rank's own buffers, and fused materializes host
+views once per coarse step (tracer advection is a host consumer, like
+diagnostics). The particle load model (``cells + alpha * N``) feeds the
+balancer through the pipeline's weight hooks.
 """
 
 from __future__ import annotations
@@ -67,9 +78,20 @@ from ..core import (
     RankArenas,
     SFCBalancer,
     make_uniform_forest,
+    recompute_weights,
 )
 from ..core.forest import Block, BlockForest
 from ..core.pipeline import StageStats
+from ..particles import (
+    ParticlesConfig,
+    advect_block_batch,
+    particle_block_weight,
+    particle_proxy_weight,
+    redistribute_particles,
+    register_particles,
+    seed_particles,
+)
+from ..particles import total_particles as _forest_total_particles
 from ..kernels.lbm_collide.ops import (
     make_arena_stream_collide,
     make_fused_superstep,
@@ -100,6 +122,8 @@ class LidDrivenCavityConfig:
     kernel_backend: str = "pallas"
     stepping_mode: str = "arena"  # | "fused" (device) | "sharded" (per-rank) | "restack" (seed)
     obstacle_fn: Callable[[np.ndarray], np.ndarray] | None = None  # (N,3)->bool
+    # optional Lagrangian tracer layer (repro.particles); None disables it
+    particles: ParticlesConfig | None = None
 
 
 def _make_balancer(name: str):
@@ -146,8 +170,27 @@ class AMRLBM:
             else None
         )
         self.comm = Comm(cfg.nranks)
+        # Lagrangian tracers: the particle set registers as one more §2.5
+        # block-data item (migration/checkpoint/resilience come for free) and
+        # installs the cells + alpha*N load model into the pipeline, so the
+        # balancers finally see a genuinely heterogeneous load.
+        self._block_weight_fn = None
+        if cfg.particles is not None:
+            register_particles(self.fields, self.geom)
+            self._block_weight_fn = particle_block_weight(
+                cfg.cells_per_block, cfg.particles.alpha
+            )
         self.pipeline = AMRPipeline(
-            balancer=_make_balancer(cfg.balancer), registry=self.registry
+            balancer=_make_balancer(cfg.balancer),
+            registry=self.registry,
+            weight_fn=(
+                particle_proxy_weight(
+                    self.geom, cfg.cells_per_block, cfg.particles.alpha
+                )
+                if cfg.particles is not None
+                else None
+            ),
+            block_weight_fn=self._block_weight_fn,
         )
         self.criterion = VelocityGradientCriterion(
             spec=self.spec,
@@ -177,9 +220,22 @@ class AMRLBM:
             "halo": StageStats(),
             "step": StageStats(),
             "fused": StageStats(),
+            "particles": StageStats(),
         }
+        # cumulative tracer counters (benchmarks/diagnostics)
+        self.particles_advected = 0
+        self.particles_moved = 0
         for blk in self.forest.all_blocks():
             self._init_block(blk)
+        if cfg.particles is not None:
+            seed_particles(
+                self.forest,
+                self.geom,
+                per_block=cfg.particles.per_block,
+                seed=cfg.particles.seed,
+                region=cfg.particles.region,
+            )
+            recompute_weights(self.forest, self._block_weight_fn)
         if self.arena is not None:
             self.arena.adopt(self.forest)
         if self.arenas is not None:
@@ -451,11 +507,101 @@ class AMRLBM:
             self.arena.device().flush()
 
 
+    # -- Lagrangian tracers -----------------------------------------------------
+    def _particle_batches(
+        self, level: int
+    ) -> list[tuple[np.ndarray, np.ndarray, dict[int, int], list[Block]]]:
+        """(pdf stack, mask stack, bid->slot, blocks) advection groups for one
+        level. Host modes batch the whole level (arena slots, or an ad-hoc
+        restack); sharded batches per rank over that rank's own buffers, so a
+        rank's tracers read only the rank's own memory."""
+        if self.cfg.stepping_mode == "sharded":
+            out = []
+            for r in range(self.cfg.nranks):
+                arena = self.arenas.per_rank[r]
+                pdf = arena.buffer(level, "pdf")
+                if pdf is None or pdf.shape[0] == 0:
+                    continue
+                blocks = [
+                    b
+                    for b in self.forest.local_blocks(r).values()
+                    if b.level == level
+                ]
+                out.append(
+                    (pdf, arena.buffer(level, "mask"), arena.slots(level), blocks)
+                )
+            return out
+        if self.cfg.stepping_mode == "restack":
+            blocks = sorted(
+                (b for b in self.forest.all_blocks() if b.level == level),
+                key=lambda b: b.bid,
+            )
+            if not blocks:
+                return []
+            pdf = np.stack([b.data["pdf"] for b in blocks])
+            mask = np.stack([b.data["mask"] for b in blocks])
+            return [(pdf, mask, {b.bid: i for i, b in enumerate(blocks)}, blocks)]
+        # arena / fused: persistent level buffers (host views are current
+        # after materialize_host)
+        pdf = self.arena.buffer(level, "pdf")
+        if pdf is None or pdf.shape[0] == 0:
+            return []
+        blocks = [b for b in self.forest.all_blocks() if b.level == level]
+        return [
+            (pdf, self.arena.buffer(level, "mask"), self.arena.slots(level), blocks)
+        ]
+
+    def _step_particles(self) -> None:
+        """Advect tracers through the end-of-step velocity field and route
+        escapees to their new block/rank (batched p2p, one message per rank
+        pair). Runs once per coarse step in every stepping mode."""
+        self.materialize_host()  # fused: host pdf views must be current
+        # Ghost layers must be a deterministic function of the (mode-
+        # identical) interiors so interpolation reads the same values in
+        # every mode. The next substep's exchange overwrites them again —
+        # and the fused program re-exchanges in-program before any device
+        # read — so this host-side write needs no residency drop.
+        self._exchange_ghosts()
+        t0 = time.perf_counter()
+        s0 = self.comm.stats.summary()
+        advected = 0
+        for level in self.forest.levels_in_use():
+            for pdf, mask, slots, blocks in self._particle_batches(level):
+                advected += advect_block_batch(
+                    pdf,
+                    mask,
+                    self.spec.lattice,
+                    self.geom,
+                    blocks,
+                    slots,
+                    level=level,
+                    cells=self.spec.cells,
+                    ghost=self.spec.ghost,
+                )
+        moved, _cross_bytes = redistribute_particles(
+            self.forest,
+            self.geom,
+            self.comm,
+            boundary=self.cfg.particles.boundary,
+        )
+        self.particles_advected += advected
+        self.particles_moved += moved
+        self.data_stats["particles"].add(
+            StageStats.delta(
+                s0, self.comm.stats.summary(), time.perf_counter() - t0
+            )
+        )
+
     def advance(self, coarse_steps: int = 1) -> None:
         """Advance by coarse time steps with per-level substepping."""
         self._sync_caches()
         if self.cfg.stepping_mode == "fused":
-            self._advance_fused(coarse_steps)
+            if self.cfg.particles is None:
+                self._advance_fused(coarse_steps)
+                return
+            for _ in range(coarse_steps):
+                self._advance_fused(1)
+                self._step_particles()
             return
         levels = self.forest.levels_in_use()
         lmax = max(levels)
@@ -470,6 +616,8 @@ class AMRLBM:
                     StageStats(seconds=time.perf_counter() - t0)
                 )
             self.coarse_step += 1
+            if self.cfg.particles is not None:
+                self._step_particles()
 
     # -- AMR ------------------------------------------------------------------
     def adapt(self, force_rebalance: bool = False):
@@ -519,6 +667,10 @@ class AMRLBM:
             speed = np.sqrt((u**2).sum(axis=0)) * fluid
             vmax = max(vmax, float(self._interior(speed).max(initial=0.0)))
         return vmax
+
+    def total_particles(self) -> int:
+        """Tracer population across the whole forest (conservation probe)."""
+        return _forest_total_particles(self.forest)
 
     def num_fluid_cells(self) -> int:
         return int(

@@ -1,0 +1,187 @@
+"""Jitted Lagrangian advection: trilinear velocity interpolation + RK2.
+
+One kernel call advects all particles of one (level, block-batch) group: it
+gathers the PDF stack's eight surrounding cells per particle, forms the
+macroscopic velocity per corner, trilinearly blends, takes an RK2 midpoint
+sample, and returns the end-of-step lattice velocity per particle. Positions
+are integrated on the host in float64.
+
+**Cross-batch determinism.** The sharded path batches per rank while the
+host modes batch a whole level, so the same particle must produce bitwise
+identical results under different batch shapes. All reductions are therefore
+written as *fixed-order chained adds* (the Q-sum over 19 populations and the
+8-corner trilinear blend are unrolled) — XLA does not reassociate explicit
+float adds, the same property the compiled ghost plan relies on for its
+host==device bitwise guarantee. Everything per-particle is elementwise or a
+gather, so batch shape cannot influence a particle's arithmetic.
+
+**Units.** World space: one root block = unit cube. A level-l block spans
+``2**-l`` per axis with ``n`` cells, and substeps ``2**l`` times per coarse
+step, so a lattice velocity ``u`` (cells/substep) is a world displacement of
+``u * 2**l * h_l = u / n`` per coarse step — *level-independent*. In the
+kernel's own (ghosted cell-index) coordinates the midpoint offset is
+``0.5 * dt * 2**l * u`` cells. With one ghost layer, cell centers span
+``[-g+0.5, n+g-0.5]``, so trilinear interpolation is defined everywhere in
+the block and midpoint excursions are clamped to that hull.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.forest import Block
+
+from .storage import block_box, num_particles
+
+__all__ = ["advect_block_batch", "gather_batch", "scatter_batch"]
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(3, (n - 1).bit_length())
+
+
+@functools.lru_cache(maxsize=None)
+def _kernel(Q: int, c_bytes: bytes):
+    """Build the jitted advection kernel for one lattice (closed-over c)."""
+    c = np.frombuffer(c_bytes, dtype=np.float32).reshape(Q, 3)
+
+    def sample(pdf, mask, slot, xi):
+        """Fluid-masked macroscopic velocity at positions ``xi`` (ghosted
+        cell-center coordinates), trilinear over the 8 surrounding cells."""
+        dims = pdf.shape[-3:]
+        i0 = [
+            jnp.clip(jnp.floor(xi[:, d]).astype(jnp.int32), 0, dims[d] - 2)
+            for d in range(3)
+        ]
+        t = [jnp.clip(xi[:, d] - i0[d].astype(xi.dtype), 0.0, 1.0) for d in range(3)]
+        out = None
+        for dx in (0, 1):
+            for dy in (0, 1):
+                for dz in (0, 1):
+                    ix, iy, iz = i0[0] + dx, i0[1] + dy, i0[2] + dz
+                    f = pdf[slot, :, ix, iy, iz]  # (N, Q) corner populations
+                    # fixed-order chained Q-sums (no reassociation)
+                    rho = f[:, 0]
+                    for q in range(1, Q):
+                        rho = rho + f[:, q]
+                    u = []
+                    for d in range(3):
+                        m = f[:, 0] * c[0, d]
+                        for q in range(1, Q):
+                            m = m + f[:, q] * c[q, d]
+                        u.append(m / jnp.maximum(rho, 1e-12))
+                    fluid = (mask[slot, ix, iy, iz] == 0).astype(xi.dtype)
+                    w = (
+                        (t[0] if dx else 1.0 - t[0])
+                        * (t[1] if dy else 1.0 - t[1])
+                        * (t[2] if dz else 1.0 - t[2])
+                    ) * fluid
+                    term = jnp.stack([w * u[d] for d in range(3)], axis=1)
+                    out = term if out is None else out + term  # canonical order
+        return out  # (N, 3) lattice velocity
+
+    @jax.jit
+    def advect(pdf, mask, xi, slot, step_cells, dt):
+        """RK2 midpoint: returns the end-of-step lattice velocity (N, 3)."""
+        u1 = sample(pdf, mask, slot, xi)
+        xi_mid = xi + (0.5 * dt) * step_cells * u1
+        return sample(pdf, mask, slot, xi_mid)
+
+    return advect
+
+
+def gather_batch(
+    blocks: list[Block],
+    slots: dict[int, int],
+    name: str = "particles",
+) -> tuple[np.ndarray, np.ndarray, list[tuple[Block, int]]]:
+    """Concatenate the particle positions of a block batch (ascending bid)
+    into one (N, 3) array with a per-particle buffer-slot index. Returns
+    ``(pos, slot, layout)`` where ``layout`` records per-block counts for
+    :func:`scatter_batch`."""
+    blocks = sorted(blocks, key=lambda b: b.bid)
+    pos_parts, slot_parts, layout = [], [], []
+    for b in blocks:
+        p = b.data.get(name)
+        n = num_particles(p)
+        layout.append((b, n))
+        if n:
+            pos_parts.append(p["pos"])
+            slot_parts.append(np.full(n, slots[b.bid], dtype=np.int32))
+    if not pos_parts:
+        return np.empty((0, 3)), np.empty((0,), np.int32), layout
+    return np.concatenate(pos_parts), np.concatenate(slot_parts), layout
+
+
+def scatter_batch(
+    layout: list[tuple[Block, int]],
+    pos: np.ndarray,
+    vel: np.ndarray,
+    name: str = "particles",
+) -> None:
+    """Write advected positions/velocities back per block (same order that
+    :func:`gather_batch` concatenated them in)."""
+    off = 0
+    for b, n in layout:
+        if n:
+            p = b.data[name]
+            b.data[name] = {"pos": pos[off : off + n], "vel": vel[off : off + n], "id": p["id"]}
+            off += n
+
+
+def advect_block_batch(
+    pdf: np.ndarray,
+    mask: np.ndarray,
+    lattice,
+    geom,
+    blocks: list[Block],
+    slots: dict[int, int],
+    *,
+    level: int,
+    cells: tuple[int, int, int],
+    ghost: int,
+    dt: float = 1.0,
+    name: str = "particles",
+) -> int:
+    """Advect all particles of a block batch against its (B, Q, X, Y, Z) PDF
+    stack (numpy or device-resident jax array) for one coarse step.
+
+    ``slots`` maps bid -> stack slot (arena slot index, or position in an
+    ad-hoc restack). Positions integrate on the host in float64 from the
+    kernel's float32 velocities; the particle's stored ``vel`` is the
+    end-of-step world velocity. Returns the number of particles advected."""
+    pos, slot, layout = gather_batch(blocks, slots, name)
+    n = pos.shape[0]
+    if n == 0:
+        return 0
+    ncells = np.asarray(cells, dtype=np.float64)
+    lo_of = np.zeros((max(slots[b.bid] for b, _n in layout) + 1, 3))
+    for b, _cnt in layout:
+        lo_of[slots[b.bid]] = block_box(geom, b.bid)[0]
+    h = (2.0 ** -level) / ncells  # world cell size per axis on this level
+    # ghosted cell-center coordinates (f64 on host, f32 into the kernel):
+    xi64 = (pos - lo_of[slot]) / h - 0.5 + ghost
+    # pad to a pow2 length so jit specializations stay bounded
+    npad = _next_pow2(n)
+    xi = np.full((npad, 3), float(ghost), dtype=np.float32)
+    xi[:n] = xi64.astype(np.float32)
+    slot_pad = np.zeros(npad, dtype=np.int32)
+    slot_pad[:n] = slot
+    c32 = np.ascontiguousarray(lattice.c, dtype=np.float32)
+    kern = _kernel(lattice.Q, c32.tobytes())
+    u = kern(
+        jnp.asarray(pdf),
+        jnp.asarray(mask),
+        jnp.asarray(xi),
+        jnp.asarray(slot_pad),
+        jnp.float32(2.0**level),
+        jnp.float32(dt),
+    )
+    u = np.asarray(u[:n]).astype(np.float64)
+    vel_world = u / ncells  # per coarse time unit, level-independent
+    scatter_batch(layout, pos + dt * vel_world, vel_world, name)
+    return n

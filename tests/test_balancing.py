@@ -134,3 +134,135 @@ def test_diffusion_flow_conservation_deterministic(geom3d):
         for li, w in pushed.items():
             budget = sum(f[li] for f in bal.last_flows[r].values() if f[li] > 0)
             assert w <= budget + 1e-9, (r, li, w, budget)
+
+
+# -- data-dependent weights (recompute_weights + particle load model) ---------------
+
+
+def test_refined_octet_rederives_weights_from_callback(geom3d):
+    """Regression: blocks created by refine/coarsen/migrate used to keep the
+    construction default ``weight=1.0``. With ``block_weight_fn`` set, an
+    octet refined from a weighted parent re-derives its weights from the
+    callback (post-migration reevaluation), not from any default."""
+    from repro.core import recompute_weights
+
+    forest = make_uniform_forest(geom3d, 2, level=1)
+    for b in forest.all_blocks():
+        b.data["load"] = 5.0  # data the weight model derives from
+    weight_fn = lambda blk: float(blk.data.get("load", 0.0)) or 1.0
+    assert recompute_weights(forest, weight_fn) == forest.num_blocks()
+
+    target = min(b.bid for b in forest.all_blocks())
+    reg = BlockDataRegistry.trivial("load")
+    pipe = AMRPipeline(
+        balancer=SFCBalancer(order="morton"),
+        registry=reg,
+        block_weight_fn=weight_fn,
+    )
+    comm = Comm(2)
+    forest, _ = pipe.run_cycle(
+        forest, comm, lambda r, blocks: {target: 2} if target in blocks else {}
+    )
+    children = [b for b in forest.all_blocks() if b.level == 2]
+    assert len(children) == 8
+    for b in children:
+        # trivial registry's split passes the payload through to every child
+        assert b.weight == weight_fn(b) == 5.0, hex(b.bid)
+
+
+def test_default_proxy_weight_propagates_instead_of_resetting(geom3d):
+    """Regression for the latent 1.0-reset: without any weight callback, a
+    plain rebalance cycle must leave custom block weights intact."""
+    forest = make_uniform_forest(geom3d, 4, level=1)
+    for b in forest.all_blocks():
+        b.weight = 2.5
+    comm = Comm(4)
+    pipe = AMRPipeline(
+        balancer=DiffusionBalancer(mode="pushpull", flow_iterations=5),
+        registry=BlockDataRegistry.trivial(),
+    )
+    forest, _ = pipe.run_cycle(forest, comm, None, force_rebalance=True)
+    assert all(b.weight == 2.5 for b in forest.all_blocks())
+
+
+def _clustered_particle_forest(geom, nranks, *, seed=5):
+    """Uniform level-1 forest with tracers clustered in one domain corner —
+    the heterogeneous mesh+particle load regime (Nanda et al. 2025)."""
+    from repro.particles import register_particles, seed_particles
+
+    forest = make_uniform_forest(geom, nranks, level=1)
+    reg = BlockDataRegistry()
+    register_particles(reg, geom)
+    seed_particles(
+        forest, geom, per_block=40, seed=seed,
+        region=((0.0, 0.0, 0.0), (1.0, 1.0, 1.0)),
+    )
+    return forest, reg
+
+
+def test_diffusion_reduces_weighted_imbalance_on_particle_cluster(geom3d):
+    """Deterministic twin of the hypothesis property: with the
+    cells + alpha*N load model on a particle-clustered forest, diffusion
+    balancing strictly reduces the max/mean *weighted* load."""
+    from repro.particles import particle_block_weight, particle_proxy_weight
+
+    nranks = 8
+    cells, alpha = (4, 4, 4), 2.0
+    forest, reg = _clustered_particle_forest(geom3d, nranks)
+    bw = particle_block_weight(cells, alpha)
+    from repro.core import recompute_weights
+
+    recompute_weights(forest, bw)
+
+    def imbalance(f):
+        loads = f.weights_per_rank()
+        return max(loads) / (sum(loads) / len(loads))
+
+    before = imbalance(forest)
+    assert before > 1.3, "the cluster must create a genuine imbalance"
+    comm = Comm(nranks)
+    pipe = AMRPipeline(
+        balancer=DiffusionBalancer(mode="pushpull", flow_iterations=5,
+                                   max_main_iterations=30),
+        registry=reg,
+        weight_fn=particle_proxy_weight(geom3d, cells, alpha),
+        block_weight_fn=bw,
+    )
+    forest, report = pipe.run_cycle(forest, comm, None, force_rebalance=True)
+    forest.check_all()
+    after = imbalance(forest)
+    assert after < before, (before, after)
+    assert after < 1.0 + 0.6 * (before - 1.0), (before, after)
+
+
+def test_particle_conservation_through_advect_redistribute_amr(geom3d):
+    """Deterministic twin of the hypothesis property in test_property.py:
+    displace (stand-in advection) -> redistribute -> refine/coarsen/migrate
+    conserves the particle population exactly, and every particle ends up
+    inside its block."""
+    import numpy as np
+
+    from repro.particles import all_particles, block_box, redistribute_particles
+
+    nranks = 5
+    forest, reg = _clustered_particle_forest(geom3d, nranks)
+    before = all_particles(forest)
+    rng_np = np.random.default_rng(11)
+    for b in forest.all_blocks():
+        p = b.data["particles"]
+        p["pos"][...] += rng_np.normal(scale=0.05, size=p["pos"].shape)
+    comm = Comm(nranks)
+    moved, _ = redistribute_particles(forest, geom3d, comm, boundary="reflect")
+    assert moved > 0
+    pipe = AMRPipeline(
+        balancer=DiffusionBalancer(mode="pushpull", flow_iterations=5),
+        registry=reg,
+    )
+    forest, _ = pipe.run_cycle(forest, comm, make_random_marks(4))
+    forest.check_all()
+    after = all_particles(forest)
+    np.testing.assert_array_equal(before["id"], after["id"])
+    for b in forest.all_blocks():
+        lo, hi = block_box(geom3d, b.bid)
+        p = b.data["particles"]
+        assert np.all((p["pos"] >= lo) & (p["pos"] < hi)), hex(b.bid)

@@ -107,3 +107,34 @@ def test_migration_moves_data_to_new_owner(geom):
     forest, _ = pipe.run_cycle(forest, comm, None, force_rebalance=True)
     for b in forest.all_blocks():
         assert b.data["payload"] == b.bid  # payloads follow their blocks
+
+
+# -- payload byte accounting --------------------------------------------------------
+
+
+def test_payload_nbytes_sizes_ragged_dicts_exactly():
+    """Regression: dict-of-ndarray (particle-style SoA) payloads must size to
+    the exact sum of array bytes plus wire keys — previously dict keys were
+    dropped and unknown leaf types fell through to a flat pickled guess."""
+    from repro.core.migration import payload_nbytes
+
+    pos = np.zeros((5, 3), np.float64)
+    ids = np.arange(5, dtype=np.int64)
+    ragged = {"pos": pos, "id": ids}
+    assert payload_nbytes(ragged) == pos.nbytes + ids.nbytes + len("pos") + len("id")
+    # nested ragged containers recurse exactly
+    nested = [ragged, {"pos": np.zeros((2, 3), np.float32)}]
+    assert payload_nbytes(nested) == payload_nbytes(ragged) + 2 * 3 * 4 + 3
+    assert payload_nbytes({}) == 0 and payload_nbytes(None) == 0
+
+
+def test_payload_nbytes_scalar_conventions():
+    from repro.core.migration import payload_nbytes
+
+    assert payload_nbytes(np.float32(1.0)) == 4  # numpy scalar: itemsize
+    assert payload_nbytes(np.int64(1)) == 8
+    assert payload_nbytes(True) == 1
+    assert payload_nbytes(3) == 8 and payload_nbytes(3.5) == 8
+    assert payload_nbytes("abcd") == 4
+    assert payload_nbytes(b"xyz") == 3
+    assert payload_nbytes((np.zeros(4, np.int32), "ab")) == 16 + 2

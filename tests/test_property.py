@@ -174,3 +174,64 @@ def test_diffusion_never_loses_blocks(seed, nranks):
     forest, _ = pipe.run_cycle(forest, comm, None, force_rebalance=True)
     assert forest.num_blocks() == total_blocks
     assert abs(sum(b.weight for b in forest.all_blocks()) - total_weight) < 1e-9
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    nranks=st.sampled_from([2, 4, 7]),
+    boundary=st.sampled_from(["reflect", "periodic"]),
+)
+@_slow
+def test_particle_conservation_through_advect_redistribute_amr(seed, nranks, boundary):
+    """Particle-count conservation across displace (stand-in advection) ->
+    redistribute -> refine -> coarsen -> migrate: the id set is conserved
+    exactly and every particle ends up inside its owning block (deterministic
+    twin: test_balancing.py)."""
+    import random
+
+    import numpy as np
+
+    from repro.particles import (
+        all_particles,
+        block_box,
+        redistribute_particles,
+        register_particles,
+        seed_particles,
+    )
+
+    forest = make_uniform_forest(GEOM, nranks, level=1)
+    reg = BlockDataRegistry()
+    register_particles(reg, GEOM)
+    seed_particles(forest, GEOM, per_block=5, seed=seed)
+    before = all_particles(forest)
+    rng_np = np.random.default_rng(seed)
+    for b in forest.all_blocks():
+        p = b.data["particles"]
+        p["pos"][...] += rng_np.normal(scale=0.06, size=p["pos"].shape)
+    comm = Comm(nranks)
+    redistribute_particles(forest, GEOM, comm, boundary=boundary)
+    rng = random.Random(seed)
+
+    def mark(rank, blocks):
+        out = {}
+        for bid, blk in blocks.items():
+            x = rng.random()
+            if x < 0.4:
+                out[bid] = blk.level + 1
+            elif x < 0.7:
+                out[bid] = blk.level - 1
+        return out
+
+    pipe = AMRPipeline(
+        balancer=DiffusionBalancer(mode="pushpull", flow_iterations=5,
+                                   max_main_iterations=20),
+        registry=reg,
+    )
+    forest, _ = pipe.run_cycle(forest, comm, mark)
+    forest.check_all()
+    after = all_particles(forest)
+    np.testing.assert_array_equal(before["id"], after["id"])
+    for b in forest.all_blocks():
+        lo, hi = block_box(GEOM, b.bid)
+        p = b.data["particles"]
+        assert np.all((p["pos"] >= lo) & (p["pos"] < hi))

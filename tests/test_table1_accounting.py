@@ -20,7 +20,11 @@ are now assertable end to end:
 import pytest
 
 from repro.lbm import AMRLBM, LidDrivenCavityConfig
+from repro.particles import ParticlesConfig
 
+# particle traffic enabled: tracer advection/redistribution and the
+# cells + alpha*N weight model must not change the collective shape of the
+# cycle — zero allgathers, O(1) bytes per collective
 BASE = dict(
     root_grid=(2, 2, 2),
     cells_per_block=(8, 8, 8),
@@ -31,6 +35,12 @@ BASE = dict(
     refine_lower=0.004,
     stepping_mode="sharded",
     kernel_backend="ref",
+    particles=ParticlesConfig(
+        per_block=8,
+        seed=1,
+        alpha=0.05,
+        region=((0.0, 0.0, 1.5), (2.0, 2.0, 2.0)),
+    ),
 )
 
 
@@ -55,6 +65,10 @@ def test_diffusion_cycle_records_no_allgather(diffusion_runs):
         # ghost exchange itself is collective-free (halo stage attribution)
         assert sim.data_stats["halo"].collective_bytes_per_rank == 0
         assert sim.data_stats["halo"].p2p_bytes > 0
+        # particle traffic is live and just as collective-free
+        assert sim.total_particles() > 0
+        assert sim.particles_advected > 0
+        assert sim.data_stats["particles"].collective_bytes_per_rank == 0
 
 
 def test_per_rank_held_bytes_bounded_as_ranks_grow(diffusion_runs):
