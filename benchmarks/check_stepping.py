@@ -32,9 +32,11 @@ SCHEMA: dict[str, type | tuple[type, ...]] = {
     "arena_speedup": (int, float),
     "fused_speedup": (int, float),
     "sharded_speedup": (int, float),
+    "fused_sharded_speedup": (int, float),
     "sharded_halo_p2p_bytes_per_step": int,
+    "fused_sharded_halo_p2p_bytes_per_step": int,
 }
-MODES = ("restack", "arena", "fused", "sharded")
+MODES = ("restack", "arena", "fused", "sharded", "fused_sharded")
 
 
 def _check_extra(i: int, entry: dict) -> list[str]:

@@ -13,10 +13,11 @@ Mapping to the paper:
   migration_volume   Figs 8/9/11/13 data-migration stage: bytes moved per rank
   lbm_mlups          kernel throughput (MLUPS, interpret-mode lower bound +
                      pure-jnp reference path)
-  stepping           per-substep restacking vs persistent arena vs the
-                     rank-sharded data plane: blocks/s of the full
-                     substepping loop, best-of-k timed, swept over --ranks,
-                     appended to the BENCH_stepping.json trajectory
+  stepping           per-substep restacking vs persistent arena vs the fused
+                     device superstep vs the rank-sharded data plane (host
+                     p2p + device-resident fused_sharded): blocks/s of the
+                     full substepping loop, best-of-k timed, swept over
+                     --ranks, appended to the BENCH_stepping.json trajectory
   particles          Lagrangian tracer layer: particles/s advected (RK2 +
                      redistribution) per stepping mode + redistribution p2p
                      bytes per step, appended to BENCH_particles.json
@@ -204,10 +205,12 @@ def stepping(
     steps: int | None = None,
 ) -> None:
     """Per-substep restacking (seed) vs persistent arena vs the device-
-    resident fused superstep vs the rank-sharded data plane on the
-    lid-driven-cavity config: blocks/s throughput of the full substepping
-    loop (halo exchange + fused kernel), swept over simulated rank counts,
-    appended to the BENCH_stepping.json trajectory.
+    resident fused superstep vs the rank-sharded data plane (host p2p and
+    device-resident fused_sharded) on the lid-driven-cavity config: blocks/s
+    throughput of the full substepping loop (halo exchange + fused kernel),
+    swept over simulated rank counts, appended to the BENCH_stepping.json
+    trajectory (entry schema + append protocol: see README "Benchmark
+    trajectories", guarded by benchmarks/check_stepping.py in CI).
 
     Single runs on a shared host are noise-bound (observed ~1.6x swings), so
     every timing is best-of-``best_of`` (default 2 quick / 3 full)."""
@@ -221,12 +224,13 @@ def stepping(
     # restack/arena/fused never consult Block.owner, so their timings are
     # rank-independent: measure them once and reuse across the sweep
     baseline: dict[str, tuple[float, float, int]] = {}
+    rank_dependent = ("sharded", "fused_sharded")
     for nranks in ranks:
         results: dict[str, float] = {}
         halo_bytes: dict[str, int] = {}
         wall: dict[str, float] = {}
-        for mode in ("restack", "arena", "fused", "sharded"):
-            if mode != "sharded" and mode in baseline:
+        for mode in ("restack", "arena", "fused", "sharded", "fused_sharded"):
+            if mode not in rank_dependent and mode in baseline:
                 results[mode], wall[mode], halo_bytes[mode] = baseline[mode]
             else:
                 cfg = LidDrivenCavityConfig(
@@ -250,25 +254,31 @@ def stepping(
                     (2**l) * sum(1 for b in sim.forest.all_blocks() if b.level == l)
                     for l in sim.forest.levels_in_use()
                 )
-                h0 = sim.data_stats["halo"].p2p_bytes
+                # fused_sharded routes its in-program device messages through
+                # Comm but attributes them to the "fused" stage (halo and
+                # step are indistinguishable inside the per-rank programs)
+                stage = "fused" if mode == "fused_sharded" else "halo"
+                h0 = sim.data_stats[stage].p2p_bytes
                 dt = min(_timed(sim.advance, coarse) for _ in range(k))
                 results[mode] = coarse * work / dt
                 wall[mode] = dt
                 # normalized to one coarse step of the timed region, so
                 # entries are comparable across --best-of / --steps choices
                 halo_bytes[mode] = (
-                    sim.data_stats["halo"].p2p_bytes - h0
+                    sim.data_stats[stage].p2p_bytes - h0
                 ) // (k * coarse)
-                if mode != "sharded":
+                if mode not in rank_dependent:
                     baseline[mode] = (results[mode], wall[mode], halo_bytes[mode])
             _csv(f"stepping/{mode}", f"n{nranks}_blocks_per_s", round(results[mode], 1))
             _csv(f"stepping/{mode}", f"n{nranks}_wall_s", round(wall[mode], 4))
         speedup = results["arena"] / results["restack"]
         fused_rel = results["fused"] / results["restack"]
         sharded_rel = results["sharded"] / results["restack"]
+        fsh_rel = results["fused_sharded"] / results["restack"]
         _csv("stepping", f"n{nranks}_arena_speedup", round(speedup, 3))
         _csv("stepping", f"n{nranks}_fused_speedup", round(fused_rel, 3))
         _csv("stepping", f"n{nranks}_sharded_speedup", round(sharded_rel, 3))
+        _csv("stepping", f"n{nranks}_fused_sharded_speedup", round(fsh_rel, 3))
         _csv("stepping", f"n{nranks}_sharded_halo_bytes_per_step", halo_bytes["sharded"])
         traj_entries.append(
             {
@@ -282,7 +292,9 @@ def stepping(
                 "arena_speedup": round(speedup, 3),
                 "fused_speedup": round(fused_rel, 3),
                 "sharded_speedup": round(sharded_rel, 3),
+                "fused_sharded_speedup": round(fsh_rel, 3),
                 "sharded_halo_p2p_bytes_per_step": halo_bytes["sharded"],
+                "fused_sharded_halo_p2p_bytes_per_step": halo_bytes["fused_sharded"],
             }
         )
     _append_trajectory("stepping", "BENCH_stepping.json", traj_entries)

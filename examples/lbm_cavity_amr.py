@@ -5,9 +5,11 @@ diffusion load balancing, and per-level time stepping on persistent
 LevelArena buffers (use ``--mode fused`` for the device-resident fused
 superstep — one jitted program per coarse step — ``--mode restack`` for the
 legacy per-substep restacking path, ``--mode sharded`` for the rank-sharded
-data plane with cross-rank halo messaging). Prints per-epoch diagnostics
-including the AMR pipeline stage costs and, per mode, data-plane halo
-traffic or host<->device transfer counts.
+data plane with cross-rank halo messaging, and ``--mode fused_sharded`` for
+the per-rank device-resident composition of the two; see the README's
+"Choosing a stepping mode"). Prints per-epoch diagnostics including the AMR
+pipeline stage costs and, per mode, data-plane halo traffic or
+host<->device transfer counts.
 
     PYTHONPATH=src python examples/lbm_cavity_amr.py [--steps 12] [--mode arena]
 """
@@ -22,7 +24,9 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=12)
     ap.add_argument("--amr-interval", type=int, default=3)
     ap.add_argument(
-        "--mode", choices=("arena", "fused", "sharded", "restack"), default="arena"
+        "--mode",
+        choices=("arena", "fused", "sharded", "fused_sharded", "restack"),
+        default="arena",
     )
     args = ap.parse_args()
 
@@ -65,6 +69,15 @@ def main() -> None:
         print(f"fused: {fused.exchange_rounds} in-program exchanges, "
               f"{res.h2d_transfers} h2d / {res.d2h_transfers} d2h transfers "
               f"({res.h2d_bytes + res.d2h_bytes} bytes total)")
+    if args.mode == "fused_sharded":
+        fused = sim.data_stats["fused"]
+        residencies = [a.device() for a in sim.arenas.per_rank if a.levels()]
+        h2d = sum(r.h2d_transfers for r in residencies)
+        d2h = sum(r.d2h_transfers for r in residencies)
+        print(f"fused_sharded: {fused.p2p_bytes} device-message bytes in "
+              f"{fused.p2p_messages} p2p messages over {fused.exchange_rounds} "
+              f"rounds; {h2d} h2d / {d2h} d2h transfers across "
+              f"{len(residencies)} ranks")
     print(f"done: {sim.amr_cycles} AMR cycles executed")
 
 

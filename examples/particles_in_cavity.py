@@ -22,7 +22,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=12)
     ap.add_argument("--mode", default="arena",
-                    choices=["restack", "arena", "fused", "sharded"])
+                    choices=["restack", "arena", "fused", "sharded",
+                             "fused_sharded"])
     ap.add_argument("--nranks", type=int, default=4)
     ap.add_argument("--per-block", type=int, default=32)
     args = ap.parse_args()

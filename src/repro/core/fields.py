@@ -463,7 +463,24 @@ class DeviceResidency:
             self._arena_version = self.arena.version
 
     def fetch(self, level: int, name: str):
-        """The device-resident buffer for (level, field); uploads if absent."""
+        """The device-resident buffer for (level, field).
+
+        Args:
+            level: refinement level whose arena buffer to mirror.
+            name: registered field name.
+
+        Returns:
+            The ``jax.Array`` mirror of ``arena.buffer(level, name)``. If no
+            device copy exists (first access, or everything was dropped by a
+            version bump) the host buffer is uploaded and the transfer
+            counted; otherwise the cached array — possibly a device-newer
+            one installed by :meth:`store` — is returned with no transfer.
+
+        The arena version is synchronized first: if ``arena.version`` moved
+        since the last access (an ``adopt`` happened), all device state is
+        dropped before the lookup, so a fetch can never return a mirror of
+        storage that no longer backs the forest.
+        """
         import jax.numpy as jnp
 
         self._sync_version()
@@ -479,7 +496,20 @@ class DeviceResidency:
         return arr
 
     def store(self, level: int, name: str, value) -> None:
-        """Install a device-side update; the host view becomes stale."""
+        """Install a device-side update; the host view becomes stale.
+
+        Args:
+            level: refinement level the update belongs to.
+            name: registered field name.
+            value: the new device array (typically a jitted step's output);
+                its shape must match the arena buffer exactly.
+
+        The (level, field) pair is marked *device-newer*: subsequent
+        :meth:`fetch` calls return ``value`` without transfers, host readers
+        must :meth:`flush` first, and an arena ``adopt()`` while the mark is
+        set fails loudly (:meth:`check_no_pending`) instead of silently
+        discarding computed steps.
+        """
         self._sync_version()
         key = (level, name)
         host = self.arena.buffer(level, name)
@@ -491,7 +521,19 @@ class DeviceResidency:
         self._dev_newer.add(key)
 
     def drop(self, name: str | None = None, level: int | None = None) -> None:
-        """Forget device copies (after a host-side write made them stale)."""
+        """Forget device copies (after a host-side write made them stale).
+
+        Args:
+            name: restrict to one field (``None`` = every field).
+            level: restrict to one level (``None`` = every level).
+
+        Host-side writes between adoptions are a manual contract — numpy
+        views cannot announce mutation — so code that edits host buffers
+        while a synced device copy exists (e.g. the driver's mask refresh)
+        must call this for the touched field, or the edit never reaches the
+        device. Dropping a *device-newer* entry asserts: that would discard
+        a computed result — ``flush()`` first.
+        """
         self._sync_version()
         for key in [
             k
@@ -515,7 +557,15 @@ class DeviceResidency:
 
     def flush(self) -> None:
         """Materialize host views: download every device-newer buffer into
-        its arena storage in place (block views stay bound)."""
+        its arena storage in place (block views stay bound).
+
+        Downloads are counted (``d2h_transfers`` / ``d2h_bytes``) and the
+        device-newer marks cleared; the device copies are kept and remain
+        *synced*, so a later :meth:`fetch` performs no re-upload. Idempotent:
+        a second flush with nothing pending transfers nothing — the
+        conformance suite relies on this to pin "transfers only when state
+        actually moved".
+        """
         self._sync_version()
         for key in sorted(self._dev_newer):
             level, name = key
@@ -539,7 +589,15 @@ class RankArenas:
     ownership; it is the single maintenance point after migration, refine,
     coarsen, or restore (the sharded analogue of global restacking). The
     shared ``version`` counter invalidates downstream caches (device masks,
-    halo exchange plans) exactly like :class:`LevelArena.version` does.
+    halo exchange plans, compiled per-rank programs) exactly like
+    :class:`LevelArena.version` does — callers pass it as the O(1)
+    ``cache_token`` to the plan caches and key compiled-program caches on
+    it, so no cache can survive a storage rebind.
+
+    Device residency is per rank: ``per_rank[r].device()`` returns rank r's
+    own :class:`DeviceResidency` (created on first use), which is what lets
+    the ``fused_sharded`` stepping mode keep every rank's state resident on
+    its (simulated) accelerator and count per-rank transfers independently.
     """
 
     def __init__(self, registry: FieldRegistry, nranks: int) -> None:
@@ -549,12 +607,23 @@ class RankArenas:
         self.version = 0
 
     def adopt(self, forest: BlockForest) -> None:
+        """Rebuild every rank's arena from the forest's current ownership
+        and bump the shared version counter.
+
+        Args:
+            forest: the post-cycle forest; its ``nranks`` must match.
+
+        Each per-rank adopt refuses to run while that rank holds un-flushed
+        device-newer state (see :meth:`DeviceResidency.check_no_pending`),
+        so a missing ``materialize_host()`` before an AMR event fails loudly
+        on the exact rank that would have lost steps."""
         assert forest.nranks == self.nranks, (forest.nranks, self.nranks)
         for arena in self.per_rank:
             arena.adopt(forest)
         self.version += 1
 
     def buffer(self, rank: int, level: int, name: str) -> np.ndarray | None:
+        """Rank ``rank``'s (B_local, *field_shape) SoA buffer, or None."""
         return self.per_rank[rank].buffer(level, name)
 
     def num_blocks(self, rank: int, level: int) -> int:

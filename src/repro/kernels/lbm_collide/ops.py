@@ -24,6 +24,8 @@ __all__ = [
     "make_arena_stream_collide",
     "apply_compiled_ghost_plan",
     "make_fused_superstep",
+    "make_rank_emit",
+    "make_rank_absorb",
 ]
 
 
@@ -126,26 +128,32 @@ def _device_plan_ops(plan, level_index: dict[int, int]) -> list[tuple]:
     return ops
 
 
+def _flat3(a: jax.Array) -> jax.Array:
+    """(B, *lead, X, Y, Z) -> (B, C, cells) with C the flattened lead axes."""
+    return a.reshape(a.shape[0], -1, a.shape[-3] * a.shape[-2] * a.shape[-1])
+
+
+def _gather_vals(s: jax.Array, kind: str, sb, sc) -> jax.Array:
+    """Gather (and sender-side resample) one exchange segment: (N, C) values."""
+    flat = _flat3(s)
+    if kind == "fine":
+        v = flat[sb, :, sc]  # (N, 8, C): octet gather in canonical order
+        acc = v[:, 0]
+        for k in range(1, 8):  # fixed-sequence sum == host _extract
+            acc = acc + v[:, k]
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return acc * s.dtype.type(0.125)
+        return (acc / 8).astype(s.dtype)  # int fields: truncating divide
+    return flat[sb, :, sc]  # same / coarse: plain (possibly replicating) gather
+
+
 def _run_plan_ops(ops: list[tuple], bufs: list[jax.Array]) -> list[jax.Array]:
     """Execute lowered exchange ops functionally on (B, *lead, X, Y, Z)
     per-level buffers (pure gathers/scatters — safe inside jit)."""
     for dst, src, kind, db, dc, sb, sc in ops:
-        s = bufs[src]
-        flat = s.reshape(s.shape[0], -1, s.shape[-3] * s.shape[-2] * s.shape[-1])
-        if kind == "fine":
-            v = flat[sb, :, sc]  # (N, 8, C): octet gather in canonical order
-            acc = v[:, 0]
-            for k in range(1, 8):  # fixed-sequence sum == host _extract
-                acc = acc + v[:, k]
-            if jnp.issubdtype(s.dtype, jnp.floating):
-                vals = acc * s.dtype.type(0.125)
-            else:  # integer fields: truncating divide, like the host path
-                vals = (acc / 8).astype(s.dtype)
-        else:  # same / coarse: plain (possibly replicating) gather
-            vals = flat[sb, :, sc]  # (N, C)
+        vals = _gather_vals(bufs[src], kind, sb, sc)
         d = bufs[dst]
-        dflat = d.reshape(d.shape[0], -1, d.shape[-3] * d.shape[-2] * d.shape[-1])
-        bufs[dst] = dflat.at[db, :, dc].set(vals).reshape(d.shape)
+        bufs[dst] = _flat3(d).at[db, :, dc].set(vals).reshape(d.shape)
     return bufs
 
 
@@ -247,6 +255,90 @@ def make_fused_superstep(
         return jax.lax.fori_loop(0, nsub, body, pdfs)
 
     return superstep
+
+
+def make_rank_emit(messages, level_index: dict[int, int]):
+    """Compile one rank's message-building side of a sharded exchange.
+
+    ``messages`` are the :class:`~repro.lbm.halo.CompiledRankMessage` specs
+    whose ``src_rank`` is this rank; ``level_index`` maps the rank's levels
+    to positions in its buffer tuple. Returns a jitted
+    ``emit(pdfs: tuple) -> tuple`` producing one device-resident ``(N, C)``
+    payload per message (sender-side resampled, segments concatenated in the
+    spec's canonical order) — the arrays handed to the ``Comm`` fabric, so
+    nothing touches the host. Returns ``None`` when the rank sends nothing.
+    """
+    if not messages:
+        return None
+    specs = tuple(
+        tuple(
+            (level_index[src_level], kind, jnp.asarray(sb), jnp.asarray(sc))
+            for src_level, kind, sb, sc in m.gather
+        )
+        for m in messages
+    )
+
+    @jax.jit
+    def emit(pdfs):
+        out = []
+        for segs in specs:
+            parts = [_gather_vals(pdfs[li], kind, sb, sc) for li, kind, sb, sc in segs]
+            out.append(parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0))
+        return tuple(out)
+
+    return emit
+
+
+def make_rank_absorb(
+    messages,
+    local_plan,
+    level_index: dict[int, int],
+    steppers,
+    masks,
+    active_levels,
+):
+    """Compile one rank's receive+exchange+step side of a sharded substep.
+
+    ``messages`` are the inbound :class:`~repro.lbm.halo.CompiledRankMessage`
+    specs (``dst_rank`` == this rank) in plan order — the caller passes the
+    received payloads in the same order; ``local_plan`` is the rank's
+    intra-rank :class:`~repro.lbm.halo.CompiledGhostPlan` (or None);
+    ``steppers``/``masks`` map the rank's levels to ``step(f, mask) -> f``
+    kernels and device mask stacks; ``active_levels`` is this substep
+    pattern's active set intersected with the rank's levels.
+
+    Returns a jitted ``absorb(pdfs: tuple, msgs: tuple) -> tuple`` that
+    scatters inbound payload segments into ghost cells, runs the intra-rank
+    exchange, then stream+collides the active levels finest-first — one
+    device program per (rank, activity pattern), no host contact.
+    """
+    scatters = tuple(
+        tuple(
+            (level_index[dst_level], jnp.asarray(db), jnp.asarray(dc), n)
+            for dst_level, db, dc, n in m.scatter
+        )
+        for m in messages
+    )
+    local_ops = _device_plan_ops(local_plan, level_index) if local_plan else []
+    order = tuple(sorted(active_levels, reverse=True))  # finest first, as the
+    masks_t = {l: jnp.asarray(masks[l]) for l in order}  # host driver does
+
+    @jax.jit
+    def absorb(pdfs, msgs):
+        bufs = list(pdfs)
+        for segs, msg in zip(scatters, msgs):
+            off = 0
+            for li, db, dc, n in segs:
+                d = bufs[li]
+                bufs[li] = _flat3(d).at[db, :, dc].set(msg[off : off + n]).reshape(d.shape)
+                off += n
+        bufs = _run_plan_ops(local_ops, bufs)
+        for l in order:
+            i = level_index[l]
+            bufs[i] = steppers[l](bufs[i], masks_t[l])
+        return tuple(bufs)
+
+    return absorb
 
 
 def fused_stream_collide(

@@ -13,50 +13,35 @@ exchange) with the control plane (the four-step AMR pipeline):
   repartitioning, which restores the §3.3 overlap-consistency invariant
   (octets of fine cells agree with the overlapping coarse cell) exactly.
 
-Stepping modes (``LidDrivenCavityConfig.stepping_mode``):
-
-==============  ================================================================
-mode            data plane per coarse step
-==============  ================================================================
-``"fused"``     device-resident: the whole ``2^lmax`` substep cycle — per-level
-                activity masks, compiled ghost exchange, stream+collide — is
-                one jitted program over persistent device buffers
-                (:meth:`~repro.core.fields.LevelArena.device`). Zero host
-                transfers between AMR events; host views are rematerialized
-                on demand for diagnostics/migration/checkpointing.
-``"arena"``     persistent per-level :class:`~repro.core.fields.LevelArena`
-(default)       host buffers; every ``Block.data`` entry is a zero-copy view,
-                ghost exchange writes in place (numpy), and the kernel's
-                arena entry point steps a whole level per call — but each
-                substep still round-trips host<->device once per level.
-``"sharded"``   the rank-sharded data plane: one
-                :class:`~repro.core.fields.RankArenas` arena per simulated
-                rank holding only locally-owned blocks; intra-rank ghost
-                faces copy in place, cross-rank faces travel as batched p2p
-                messages over :class:`~repro.core.Comm` (sender-side
-                resampling); one kernel call per rank per level, batched
-                across ranks with equal block counts.
-``"restack"``   the seed behavior (stack all blocks of a level into a fresh
-                array every substep, copy results back out per block) — the
-                benchmark baseline.
-==============  ================================================================
+Stepping modes (``LidDrivenCavityConfig.stepping_mode``): one
+:class:`~repro.lbm.engines.StepEngine` per mode —
+``"restack"`` (seed baseline), ``"arena"`` (default, persistent host
+buffers), ``"fused"`` (single device program per coarse step),
+``"sharded"`` (rank-partitioned host data plane with p2p halo messages),
+and ``"fused_sharded"`` (per-rank device programs + device-built p2p
+messages). See the README's *Choosing a stepping mode* decision table for
+workload/rank-count guidance and ARCHITECTURE.md for the engine mode
+matrix; :mod:`repro.lbm.engines` documents the engine contract itself.
 
 Data-plane traffic is attributed in :attr:`AMRLBM.data_stats`: host modes
-fill ``"halo"`` / ``"step"``; the fused path cannot split its in-program
-exchange from its stepping, so it reports wall time plus in-program exchange
-rounds under ``"fused"`` (host<->device transfer counts live on the arena's
+fill ``"halo"`` / ``"step"``; the device-resident modes cannot split their
+in-program exchange from their stepping, so they report wall time plus
+exchange rounds (and, for ``fused_sharded``, the cross-rank p2p traffic)
+under ``"fused"`` (host<->device transfer counts live on the arenas'
 :class:`~repro.core.fields.DeviceResidency`).
 
 With ``particles=ParticlesConfig(...)`` a Lagrangian tracer layer rides the
 forest (see :mod:`repro.particles` and the README support matrix): once per
 coarse step the tracers advect through the block-local velocity field (RK2,
 trilinear) and redistribute to their new block/rank over the ``Comm`` fabric
-(attributed under ``data_stats["particles"]``). All four stepping modes are
-supported — restack/arena advect per level over host stacks, sharded runs
-one batch per rank over that rank's own buffers, and fused materializes host
-views once per coarse step (tracer advection is a host consumer, like
-diagnostics). The particle load model (``cells + alpha * N``) feeds the
-balancer through the pipeline's weight hooks.
+(attributed under ``data_stats["particles"]``). All five stepping modes are
+supported — the advection batch source is an engine hook
+(:meth:`~repro.lbm.engines.StepEngine.particle_batches`): restack/arena
+advect per level over host stacks, the sharded engines run one batch per
+rank over that rank's own buffers, and the device-resident engines
+materialize host views once per coarse step (tracer advection is a host
+consumer, like diagnostics). The particle load model (``cells + alpha * N``)
+feeds the balancer through the pipeline's weight hooks.
 """
 
 from __future__ import annotations
@@ -65,8 +50,6 @@ import time
 from dataclasses import dataclass
 from typing import Callable
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..core import (
@@ -74,8 +57,6 @@ from ..core import (
     Comm,
     DiffusionBalancer,
     ForestGeometry,
-    LevelArena,
-    RankArenas,
     SFCBalancer,
     make_uniform_forest,
     recompute_weights,
@@ -92,16 +73,10 @@ from ..particles import (
     seed_particles,
 )
 from ..particles import total_particles as _forest_total_particles
-from ..kernels.lbm_collide.ops import (
-    make_arena_stream_collide,
-    make_fused_superstep,
-    make_stream_collide,
-)
-from ..kernels.lbm_collide.ref import equilibrium
 from .criteria import VelocityGradientCriterion, macroscopic
+from .engines import ENGINES, make_engine
 from .grid import CellType, LBMBlockSpec, block_world_box, make_lbm_fields
-from .halo import compile_ghost_plan, fill_ghost_layers, fill_ghost_layers_sharded
-from .lattice import D3Q19, omega_for_level
+from .lattice import D3Q19
 
 __all__ = ["LidDrivenCavityConfig", "AMRLBM"]
 
@@ -120,7 +95,8 @@ class LidDrivenCavityConfig:
     refine_lower: float = 0.015
     balancer: str = "diffusion-pushpull"  # | "diffusion-push" | "morton" | "hilbert"
     kernel_backend: str = "pallas"
-    stepping_mode: str = "arena"  # | "fused" (device) | "sharded" (per-rank) | "restack" (seed)
+    # one StepEngine per mode; see README "Choosing a stepping mode"
+    stepping_mode: str = "arena"  # | "fused" | "sharded" | "fused_sharded" | "restack"
     obstacle_fn: Callable[[np.ndarray], np.ndarray] | None = None  # (N,3)->bool
     # optional Lagrangian tracer layer (repro.particles); None disables it
     particles: ParticlesConfig | None = None
@@ -141,8 +117,9 @@ def _make_balancer(name: str):
 class AMRLBM:
     def __init__(self, cfg: LidDrivenCavityConfig):
         self.cfg = cfg
-        assert cfg.stepping_mode in ("arena", "fused", "sharded", "restack"), (
-            cfg.stepping_mode
+        assert cfg.stepping_mode in ENGINES, (
+            cfg.stepping_mode,
+            sorted(ENGINES),
         )
         for n in cfg.cells_per_block:
             # the real invariant (shared with FieldRegistry and ghost_regions):
@@ -157,18 +134,6 @@ class AMRLBM:
         self.geom = ForestGeometry(root_grid=cfg.root_grid, max_level=12)
         self.fields = make_lbm_fields(self.spec)
         self.registry = self.fields  # typed registry drives all subsystems
-        # restack mode never reads SoA buffers — don't pay for keeping them
-        self.arena: LevelArena | None = (
-            LevelArena(self.fields)
-            if cfg.stepping_mode in ("arena", "fused")
-            else None
-        )
-        # sharded mode: one rank-local arena set per simulated rank
-        self.arenas: RankArenas | None = (
-            RankArenas(self.fields, cfg.nranks)
-            if cfg.stepping_mode == "sharded"
-            else None
-        )
         self.comm = Comm(cfg.nranks)
         # Lagrangian tracers: the particle set registers as one more §2.5
         # block-data item (migration/checkpoint/resilience come for free) and
@@ -199,23 +164,10 @@ class AMRLBM:
             max_level=cfg.max_level,
         )
         self.forest: BlockForest = make_uniform_forest(self.geom, cfg.nranks, level=0)
-        self._steppers: dict[int, Callable] = {}
-        # device mask cache; keys: level (arena) or (level, ranks) (sharded)
-        self._mask_dev: dict = {}
-        # ghost-exchange plans keyed by active level set; valid between arena
-        # adoptions (restack mode rebinds arrays per substep, so no caching)
-        self._halo_plans: dict | None = (
-            {} if (self.arena is not None or self.arenas is not None) else None
-        )
-        self._cache_version = -1  # last arena.version the caches were built for
-        # fused superstep program cache: (arena version, level tuple) -> fn
-        self._fused_fn = None
-        self._fused_key: tuple | None = None
-        self._fused_steppers: dict[int, Callable] = {}
         # data-plane stage attribution (sharded halo bytes/rounds live here,
-        # mirroring the control plane's CycleReport.stages); the fused path
-        # reports its single-program wall time + in-program exchange rounds
-        # under "fused" (halo and step are indistinguishable on device)
+        # mirroring the control plane's CycleReport.stages); the device-
+        # resident engines report their single-program wall time + exchange
+        # rounds under "fused" (halo and step are indistinguishable on device)
         self.data_stats: dict[str, StageStats] = {
             "halo": StageStats(),
             "step": StageStats(),
@@ -225,6 +177,9 @@ class AMRLBM:
         # cumulative tracer counters (benchmarks/diagnostics)
         self.particles_advected = 0
         self.particles_moved = 0
+        # the data plane: storage, steppers, plan/mask/program caches, and
+        # the per-mode advance loop all live on the engine
+        self.engine = make_engine(self)
         for blk in self.forest.all_blocks():
             self._init_block(blk)
         if cfg.particles is not None:
@@ -236,16 +191,32 @@ class AMRLBM:
                 region=cfg.particles.region,
             )
             recompute_weights(self.forest, self._block_weight_fn)
-        if self.arena is not None:
-            self.arena.adopt(self.forest)
-        if self.arenas is not None:
-            self.arenas.adopt(self.forest)
+        self.engine.adopt(self.forest)
         self.refresh_masks()
         self.coarse_step = 0
         self.amr_cycles = 0
 
+    # -- engine-owned storage (stable public aliases) ---------------------------
+    @property
+    def arena(self):
+        """The single global :class:`LevelArena` (arena/fused engines)."""
+        return self.engine.arena
+
+    @property
+    def arenas(self):
+        """The per-rank :class:`RankArenas` (sharded engines)."""
+        return self.engine.arenas
+
+    @property
+    def _halo_plans(self):
+        return self.engine._halo_plans
+
     # -- block initialization & masks ----------------------------------------
     def _init_block(self, blk: Block) -> None:
+        import jax.numpy as jnp
+
+        from ..kernels.lbm_collide.ref import equilibrium
+
         rho = jnp.ones(self.spec.mask_shape, dtype=jnp.float32)
         u = jnp.zeros((3, *self.spec.mask_shape), dtype=jnp.float32)
         blk.data["pdf"] = np.array(equilibrium(rho, u, self.spec.lattice))  # copy: must stay writable
@@ -265,7 +236,7 @@ class AMRLBM:
     def refresh_masks(self) -> None:
         """Re-derive cell types from the analytic geometry (domain walls, the
         moving lid at the top z face, optional obstacles). Writes in place so
-        arena views stay bound; the device mask cache is invalidated."""
+        arena views stay bound; the engine's device mask state is invalidated."""
         top = float(self.geom.root_grid[2])
         for blk in self.forest.all_blocks():
             xyz = self._cell_centers(blk)
@@ -283,290 +254,35 @@ class AMRLBM:
                 obst = self.cfg.obstacle_fn(xyz.reshape(-1, 3)).reshape(mask.shape)
                 mask[obst & (mask == 0)] = CellType.WALL
             blk.data["mask"][...] = mask
-        self._mask_dev.clear()
-        if self.arena is not None:
-            # host-side write: device mask copies (and the fused program that
-            # baked them in) are stale
-            self.arena.device().drop(name="mask")
-            self._fused_fn = None
-            self._fused_key = None
-
-    # -- stepping ---------------------------------------------------------------
-    def _stepper_kwargs(self, level: int) -> dict:
-        return dict(
-            omega=omega_for_level(self.cfg.omega, level),
-            lattice=self.spec.lattice,
-            u_wall=self.cfg.u_lid,
-            collision=self.cfg.collision,
-            backend=self.cfg.kernel_backend,
-            interpret=True,
-        )
-
-    def _stepper(self, level: int) -> Callable:
-        if level not in self._steppers:
-            make = (
-                make_stream_collide
-                if self.cfg.stepping_mode == "restack"
-                else make_arena_stream_collide
-            )
-            self._steppers[level] = make(**self._stepper_kwargs(level))
-        return self._steppers[level]
-
-    def _fused_stepper(self, level: int) -> Callable:
-        """Pure ``step(f, mask) -> f`` for the fused program (traced inline)."""
-        if level not in self._fused_steppers:
-            self._fused_steppers[level] = make_stream_collide(
-                **self._stepper_kwargs(level)
-            )
-        return self._fused_steppers[level]
-
-    def _storage_version(self) -> int:
-        if self.arena is not None:
-            return self.arena.version
-        if self.arenas is not None:
-            return self.arenas.version
-        return -1
-
-    def _sync_caches(self) -> None:
-        """Drop device masks and ghost plans if the arena(s) rebound storage
-        since they were built — invalidation by mechanism, not by call-site
-        discipline (any future adopt site is covered automatically)."""
-        version = self._storage_version()
-        if self._halo_plans is not None and self._cache_version != version:
-            self._mask_dev.clear()
-            self._halo_plans.clear()
-            self._cache_version = version
-
-    def _level_mask(self, level: int) -> jax.Array:
-        """Device-resident (B, X, Y, Z) mask stack, cached across substeps."""
-        self._sync_caches()
-        m = self._mask_dev.get(level)
-        if m is None:
-            m = jnp.asarray(self.arena.buffer(level, "mask"))
-            self._mask_dev[level] = m
-        return m
-
-    def _group_mask(self, level: int, ranks: tuple[int, ...]) -> jax.Array:
-        """Device mask for a batched group of rank buffers (sharded mode)."""
-        self._sync_caches()
-        key = (level, ranks)
-        m = self._mask_dev.get(key)
-        if m is None:
-            parts = [self.arenas.buffer(r, level, "mask") for r in ranks]
-            m = jnp.asarray(parts[0] if len(parts) == 1 else np.concatenate(parts))
-            self._mask_dev[key] = m
-        return m
-
-    def _step_level_sharded(self, level: int) -> None:
-        """One kernel call per rank per level, batched where shapes agree:
-        ranks whose level buffers hold the same block count share one call
-        (their stacked shapes are identical, so one jit specialization and
-        one device round-trip cover the whole group)."""
-        per_rank = [
-            (r, buf)
-            for r in range(self.cfg.nranks)
-            if (buf := self.arenas.buffer(r, level, "pdf")) is not None
-            and buf.shape[0] > 0
-        ]
-        by_count: dict[int, list[tuple[int, np.ndarray]]] = {}
-        for r, buf in per_rank:
-            by_count.setdefault(buf.shape[0], []).append((r, buf))
-        stepper = self._stepper(level)
-        for nblocks, group in sorted(by_count.items()):
-            ranks = tuple(r for r, _ in group)
-            mask = self._group_mask(level, ranks)
-            if len(group) == 1:
-                stepper(group[0][1], mask)  # in-place on the rank's buffer
-                continue
-            cat = np.concatenate([buf for _, buf in group])
-            stepper(cat, mask)
-            for i, (_r, buf) in enumerate(group):
-                np.copyto(buf, cat[i * nblocks : (i + 1) * nblocks])
-
-    def _step_level(self, level: int) -> None:
-        if self.cfg.stepping_mode == "restack":
-            blocks = [b for b in self.forest.all_blocks() if b.level == level]
-            if not blocks:
-                return
-            f = jnp.asarray(np.stack([b.data["pdf"] for b in blocks]))
-            m = jnp.asarray(np.stack([b.data["mask"] for b in blocks]))
-            f = self._stepper(level)(f, m)
-            out = np.array(f)  # copy out of the (read-only) jax buffer
-            for i, b in enumerate(blocks):
-                b.data["pdf"] = out[i]
-            return
-        if self.cfg.stepping_mode == "sharded":
-            self._step_level_sharded(level)
-            return
-        buf = self.arena.buffer(level, "pdf")
-        if buf is None or buf.shape[0] == 0:
-            return
-        # in-place: reads and writes the persistent level buffer directly
-        self._stepper(level)(buf, self._level_mask(level))
-
-    def _exchange_ghosts(self, active: set[int] | None = None) -> None:
-        """Refresh pdf ghost layers for the active levels, attributing the
-        wall time (and, in sharded mode, the p2p bytes/messages/rounds the
-        exchange put on the fabric) to the "halo" data-plane stage."""
-        self._sync_caches()  # an external adopt() must not replay stale plans
-        # arena storage is versioned (adopt bumps it on every topology /
-        # storage change), so the plan-cache guard is an O(1) token compare
-        # instead of the default O(blocks) binding scan
-        token = self._storage_version() if self._halo_plans is not None else None
-        t0 = time.perf_counter()
-        if self.cfg.stepping_mode == "sharded":
-            s0 = self.comm.stats.summary()
-            fill_ghost_layers_sharded(
-                self.forest,
-                self.fields,
-                self.comm,
-                fields=("pdf",),
-                levels=active,
-                plan_cache=self._halo_plans,
-                cache_token=token,
-            )
-            self.data_stats["halo"].add(
-                StageStats.delta(
-                    s0, self.comm.stats.summary(), time.perf_counter() - t0
-                )
-            )
-            return
-        fill_ghost_layers(
-            self.forest,
-            self.fields,
-            fields=("pdf",),
-            levels=active,
-            plan_cache=self._halo_plans,
-            cache_token=token,
-        )
-        self.data_stats["halo"].add(StageStats(seconds=time.perf_counter() - t0))
-
-    # -- fused (device-resident) stepping ---------------------------------------
-    def _fused_program(self) -> tuple[Callable, tuple[int, ...]]:
-        """Get-or-build the jitted superstep for the current forest: compiled
-        ghost plans for every activity pattern + per-level steppers + device
-        masks, cached until the next AMR event (arena version) or mask
-        refresh."""
-        levels = tuple(sorted(self.forest.levels_in_use()))
-        key = (self.arena.version, levels)
-        if self._fused_fn is not None and self._fused_key == key:
-            return self._fused_fn, levels
-        lmax = levels[-1]
-        slots = {l: self.arena.slots(l) for l in levels}
-        plans = {
-            p: compile_ghost_plan(
-                self.forest,
-                self.fields,
-                slots,
-                fields=("pdf",),
-                levels={l for l in levels if l >= lmax - p},
-            )
-            for p in range(lmax + 1)
-        }
-        res = self.arena.device()
-        self._fused_fn = make_fused_superstep(
-            levels=levels,
-            plans=plans,
-            steppers={l: self._fused_stepper(l) for l in levels},
-            masks={l: res.fetch(l, "mask") for l in levels},
-        )
-        self._fused_key = key
-        return self._fused_fn, levels
-
-    def _advance_fused(self, coarse_steps: int) -> None:
-        """Run whole coarse steps on device: one program call each, zero host
-        transfers in steady state (uploads only after AMR events / mask
-        refreshes; downloads only when diagnostics or the control plane
-        materialize host views)."""
-        fn, levels = self._fused_program()
-        res = self.arena.device()
-        pdfs = tuple(res.fetch(l, "pdf") for l in levels)
-        nsub = 1 << levels[-1]
-        t0 = time.perf_counter()
-        for _ in range(coarse_steps):
-            pdfs = fn(pdfs)
-        jax.block_until_ready(pdfs)
-        for l, arr in zip(levels, pdfs):
-            res.store(l, "pdf", arr)
-        self.data_stats["fused"].add(
-            StageStats(
-                seconds=time.perf_counter() - t0,
-                exchange_rounds=coarse_steps * nsub,
-            )
-        )
-        self.coarse_step += coarse_steps
+        self.engine.masks_refreshed()
 
     def materialize_host(self) -> None:
-        """Flush device-newer buffers into the host arena (fused mode) so
-        every ``Block.data`` view is current. Diagnostics and :meth:`adapt`
-        call this automatically; external consumers of per-block host data —
-        ``save_checkpoint``, the resilience manager, visualization — must
-        call it before reading when stepping in fused mode (no-op in the
-        host-resident modes)."""
-        if self.arena is not None:
-            self.arena.device().flush()
-
+        """Flush device-newer buffers into the host arena(s) (device-resident
+        engines) so every ``Block.data`` view is current. Diagnostics and
+        :meth:`adapt` call this automatically; external consumers of
+        per-block host data — ``save_checkpoint``, the resilience manager,
+        visualization — must call it before reading when stepping in a
+        device-resident mode (no-op in the host-resident modes)."""
+        self.engine.materialize_host()
 
     # -- Lagrangian tracers -----------------------------------------------------
-    def _particle_batches(
-        self, level: int
-    ) -> list[tuple[np.ndarray, np.ndarray, dict[int, int], list[Block]]]:
-        """(pdf stack, mask stack, bid->slot, blocks) advection groups for one
-        level. Host modes batch the whole level (arena slots, or an ad-hoc
-        restack); sharded batches per rank over that rank's own buffers, so a
-        rank's tracers read only the rank's own memory."""
-        if self.cfg.stepping_mode == "sharded":
-            out = []
-            for r in range(self.cfg.nranks):
-                arena = self.arenas.per_rank[r]
-                pdf = arena.buffer(level, "pdf")
-                if pdf is None or pdf.shape[0] == 0:
-                    continue
-                blocks = [
-                    b
-                    for b in self.forest.local_blocks(r).values()
-                    if b.level == level
-                ]
-                out.append(
-                    (pdf, arena.buffer(level, "mask"), arena.slots(level), blocks)
-                )
-            return out
-        if self.cfg.stepping_mode == "restack":
-            blocks = sorted(
-                (b for b in self.forest.all_blocks() if b.level == level),
-                key=lambda b: b.bid,
-            )
-            if not blocks:
-                return []
-            pdf = np.stack([b.data["pdf"] for b in blocks])
-            mask = np.stack([b.data["mask"] for b in blocks])
-            return [(pdf, mask, {b.bid: i for i, b in enumerate(blocks)}, blocks)]
-        # arena / fused: persistent level buffers (host views are current
-        # after materialize_host)
-        pdf = self.arena.buffer(level, "pdf")
-        if pdf is None or pdf.shape[0] == 0:
-            return []
-        blocks = [b for b in self.forest.all_blocks() if b.level == level]
-        return [
-            (pdf, self.arena.buffer(level, "mask"), self.arena.slots(level), blocks)
-        ]
-
     def _step_particles(self) -> None:
         """Advect tracers through the end-of-step velocity field and route
         escapees to their new block/rank (batched p2p, one message per rank
         pair). Runs once per coarse step in every stepping mode."""
-        self.materialize_host()  # fused: host pdf views must be current
+        self.materialize_host()  # device modes: host pdf views must be current
         # Ghost layers must be a deterministic function of the (mode-
         # identical) interiors so interpolation reads the same values in
         # every mode. The next substep's exchange overwrites them again —
-        # and the fused program re-exchanges in-program before any device
-        # read — so this host-side write needs no residency drop.
-        self._exchange_ghosts()
+        # and the device-resident programs re-exchange all levels at substep
+        # 0 before any device read — so this host-side write needs no
+        # residency drop.
+        self.engine.exchange_ghosts()
         t0 = time.perf_counter()
         s0 = self.comm.stats.summary()
         advected = 0
         for level in self.forest.levels_in_use():
-            for pdf, mask, slots, blocks in self._particle_batches(level):
+            for pdf, mask, slots, blocks in self.engine.particle_batches(level):
                 advected += advect_block_batch(
                     pdf,
                     mask,
@@ -594,30 +310,15 @@ class AMRLBM:
 
     def advance(self, coarse_steps: int = 1) -> None:
         """Advance by coarse time steps with per-level substepping."""
-        self._sync_caches()
-        if self.cfg.stepping_mode == "fused":
-            if self.cfg.particles is None:
-                self._advance_fused(coarse_steps)
-                return
-            for _ in range(coarse_steps):
-                self._advance_fused(1)
-                self._step_particles()
+        self.engine.sync_caches()
+        if self.cfg.particles is None:
+            self.engine.advance(coarse_steps)
+            self.coarse_step += coarse_steps
             return
-        levels = self.forest.levels_in_use()
-        lmax = max(levels)
         for _ in range(coarse_steps):
-            for s in range(2**lmax):
-                active = {l for l in levels if s % (2 ** (lmax - l)) == 0}
-                self._exchange_ghosts(active)
-                t0 = time.perf_counter()
-                for l in sorted(active, reverse=True):
-                    self._step_level(l)
-                self.data_stats["step"].add(
-                    StageStats(seconds=time.perf_counter() - t0)
-                )
+            self.engine.advance(1)
             self.coarse_step += 1
-            if self.cfg.particles is not None:
-                self._step_particles()
+            self._step_particles()
 
     # -- AMR ------------------------------------------------------------------
     def adapt(self, force_rebalance: bool = False):
@@ -628,13 +329,10 @@ class AMRLBM:
         )
         if report.executed:
             self.amr_cycles += 1
-            if self.arena is not None:
-                self.arena.adopt(self.forest)  # repack SoA buffers, rebind views
-            if self.arenas is not None:
-                self.arenas.adopt(self.forest)  # rebuild rank-local arenas
-            self._sync_caches()
+            self.engine.adopt(self.forest)  # repack/rebuild storage, rebind views
+            self.engine.sync_caches()
             self.refresh_masks()
-            self._exchange_ghosts()
+            self.engine.exchange_ghosts()
         return report
 
     def run(self, coarse_steps: int, amr_interval: int = 4) -> None:

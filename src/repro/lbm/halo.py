@@ -47,6 +47,9 @@ __all__ = [
     "CompiledGhostOp",
     "CompiledGhostPlan",
     "compile_ghost_plan",
+    "CompiledRankMessage",
+    "CompiledRankHaloPlan",
+    "compile_rank_halo_plan",
 ]
 
 # 2x2x2 coalescence offsets in the canonical (lexicographic) order; the host
@@ -162,12 +165,30 @@ def build_ghost_plan(
     source) entry per block/neighbor/field, with all geometry math and slice
     construction done once.
 
+    Args:
+        forest: the block forest whose ghost layers the plan refreshes.
+        spec: an :class:`~repro.lbm.grid.LBMBlockSpec` (one ghost width for
+            all ``fields``) or a :class:`~repro.core.fields.FieldRegistry`
+            (each field uses the ghost width of its own declaration).
+        fields: names of the per-block arrays to exchange.
+        levels: restrict exchange *targets* to these refinement levels
+            (``None`` = all). Sources are never restricted — a level-l
+            block's ghosts may be sourced from level l-1/l/l+1 neighbors.
+
+    Returns:
+        A list of ``(target view, kind, source)`` entries consumed by
+        :func:`run_ghost_plan`; ``kind`` is ``"same"`` (plain copy),
+        ``"fine"`` (2x2x2 coalescence) or ``"coarse"`` (replicating
+        explosion).
+
     The plan holds zero-copy views into the blocks' storage, so it stays
     valid exactly as long as the forest topology AND the backing arrays are
-    unchanged — i.e. between arena adoptions. This is the payoff of
-    persistent :class:`~repro.core.fields.LevelArena` storage: the seed's
-    per-substep restacking invalidated every array each step, making a
-    persistent plan impossible.
+    unchanged — i.e. between arena adoptions; callers that cache plans must
+    guard them with the validity token described in
+    :func:`fill_ghost_layers`. This is the payoff of persistent
+    :class:`~repro.core.fields.LevelArena` storage: the seed's per-substep
+    restacking invalidated every array each step, making a persistent plan
+    impossible.
     """
     groups = _field_groups(spec, fields)
     geom = forest.geom
@@ -354,6 +375,41 @@ def _srange(s: slice) -> np.ndarray:
     return np.arange(s.start, s.stop, dtype=np.int64)
 
 
+def _lower_region_cells(
+    sp: LBMBlockSpec, target, kind: str, src
+) -> tuple[np.ndarray, np.ndarray]:
+    """Lower one :func:`ghost_regions` result to flat C-order cell ids.
+
+    Returns ``(tgt_cell, src_cell)``: ``tgt_cell`` is ``(N,)`` destination
+    cell ids; ``src_cell`` is ``(N,)`` for ``"same"``/``"coarse"`` gathers or
+    ``(N, 8)`` for ``"fine"`` coalescence, with the trailing octet axis in
+    the canonical ``_OCTET_OFFSETS`` order so a fixed-sequence device sum is
+    bitwise identical to the host extractor."""
+    dims = tuple(c + 2 * sp.ghost for c in sp.cells)
+    tgt_cell = _flat_cells(
+        dims, _srange(target[0]), _srange(target[1]), _srange(target[2])
+    ).ravel()
+    if kind == "same":
+        src_cell = _flat_cells(
+            dims, _srange(src[0]), _srange(src[1]), _srange(src[2])
+        ).ravel()
+    elif kind == "fine":
+        w = tuple(t.stop - t.start for t in target)
+        off = np.arange(2, dtype=np.int64)
+        fx = (src[0].start + 2 * np.arange(w[0], dtype=np.int64)[:, None] + off
+              ).reshape(w[0], 1, 1, 2, 1, 1)
+        fy = (src[1].start + 2 * np.arange(w[1], dtype=np.int64)[:, None] + off
+              ).reshape(1, w[1], 1, 1, 2, 1)
+        fz = (src[2].start + 2 * np.arange(w[2], dtype=np.int64)[:, None] + off
+              ).reshape(1, 1, w[2], 1, 1, 2)
+        # trailing (2,2,2) axes flatten to octet index dx*4+dy*2+dz
+        # == the canonical _OCTET_OFFSETS order
+        src_cell = ((fx * dims[1] + fy) * dims[2] + fz).reshape(-1, 8)
+    else:  # coarse: per-axis replication maps (already ghosted ids)
+        src_cell = _flat_cells(dims, src[0], src[1], src[2]).ravel()
+    return tgt_cell, src_cell
+
+
 def compile_ghost_plan(
     forest: BlockForest,
     spec: LBMBlockSpec | FieldRegistry,
@@ -365,11 +421,26 @@ def compile_ghost_plan(
     """Lower :func:`build_ghost_plan`'s region lists into flat gather/scatter
     index arrays addressed by (arena slot, flat ghosted-cell id).
 
-    ``slots`` maps level -> bid -> slot (``LevelArena.slots``) and must cover
-    *all* blocks of the forest — targets are restricted to ``levels`` but
-    ghost sources can live on any neighboring level. Entries are batched per
-    (field, dst level, src level, kind), so the whole exchange of a level set
-    executes as a handful of vectorized ops regardless of block count.
+    Args:
+        forest: the block forest to compile the exchange for.
+        spec: :class:`~repro.lbm.grid.LBMBlockSpec` or
+            :class:`~repro.core.fields.FieldRegistry` (per-field ghost
+            widths), as in :func:`build_ghost_plan`.
+        slots: level -> bid -> slot (``LevelArena.slots``); must cover *all*
+            blocks of the forest — targets are restricted to ``levels`` but
+            ghost sources can live on any neighboring level.
+        fields: names of the fields to exchange (one op group per field).
+        levels: restrict exchange targets to these levels (``None`` = all).
+
+    Returns:
+        A :class:`CompiledGhostPlan` whose ops are batched per (field, dst
+        level, src level, kind), so the whole exchange of a level set
+        executes as a handful of vectorized ops regardless of block count.
+
+    The compiled plan contains index arrays only (no array views); it stays
+    valid as long as the forest topology and the slot assignment are
+    unchanged, i.e. until the next arena ``adopt()`` — callers key their
+    program caches on ``arena.version`` for exactly this reason.
     """
     groups = _field_groups(spec, fields)
     geom = forest.geom
@@ -387,28 +458,7 @@ def compile_ghost_plan(
                 if reg is None:
                     continue
                 target, (kind, src) = reg
-                dims = tuple(c + 2 * sp.ghost for c in sp.cells)
-                tgt_cell = _flat_cells(
-                    dims, _srange(target[0]), _srange(target[1]), _srange(target[2])
-                ).ravel()
-                if kind == "same":
-                    src_cell = _flat_cells(
-                        dims, _srange(src[0]), _srange(src[1]), _srange(src[2])
-                    ).ravel()
-                elif kind == "fine":
-                    w = tuple(t.stop - t.start for t in target)
-                    off = np.arange(2, dtype=np.int64)
-                    fx = (src[0].start + 2 * np.arange(w[0], dtype=np.int64)[:, None] + off
-                          ).reshape(w[0], 1, 1, 2, 1, 1)
-                    fy = (src[1].start + 2 * np.arange(w[1], dtype=np.int64)[:, None] + off
-                          ).reshape(1, w[1], 1, 1, 2, 1)
-                    fz = (src[2].start + 2 * np.arange(w[2], dtype=np.int64)[:, None] + off
-                          ).reshape(1, 1, w[2], 1, 1, 2)
-                    # trailing (2,2,2) axes flatten to octet index dx*4+dy*2+dz
-                    # == the canonical _OCTET_OFFSETS order
-                    src_cell = ((fx * dims[1] + fy) * dims[2] + fz).reshape(-1, 8)
-                else:  # coarse: per-axis replication maps (already ghosted ids)
-                    src_cell = _flat_cells(dims, src[0], src[1], src[2]).ravel()
+                tgt_cell, src_cell = _lower_region_cells(sp, target, kind, src)
                 n = tgt_cell.size
                 dst_slot = np.full(n, t_slot, dtype=np.int32)
                 src_slot = np.full(src_cell.shape, s_slot, dtype=np.int32)
@@ -471,8 +521,23 @@ def build_rank_halo_plan(
 ) -> RankHaloPlan:
     """Split the ghost-exchange plan by ownership: same-owner pairs become
     in-place copies, cross-owner pairs become (sender extract, receiver
-    write) entries batched per rank pair. Like :func:`build_ghost_plan` the
-    plan holds zero-copy views, so it stays valid between arena adoptions."""
+    write) entries batched per rank pair.
+
+    Args:
+        forest: the block forest (``Block.owner`` decides intra vs cross).
+        spec: :class:`~repro.lbm.grid.LBMBlockSpec` or
+            :class:`~repro.core.fields.FieldRegistry`, as in
+            :func:`build_ghost_plan`.
+        fields: names of the per-block arrays to exchange.
+        levels: restrict exchange targets to these levels (``None`` = all).
+
+    Returns:
+        A :class:`RankHaloPlan`; execute it with :func:`run_rank_halo_plan`.
+
+    Like :func:`build_ghost_plan` the plan holds zero-copy views, so it
+    stays valid between arena adoptions only; cached plans are guarded by
+    the same validity token (see :func:`fill_ghost_layers`) and rebuilt
+    automatically when the forest topology or storage binding changed."""
     groups = _field_groups(spec, fields)
     geom = forest.geom
     by_id: dict[int, Block] = {b.bid: b for b in forest.all_blocks()}
@@ -561,3 +626,207 @@ def fill_ghost_layers_sharded(
     )
     run_rank_halo_plan(plan, comm)
     return plan
+
+
+# -- compiled rank-sharded exchange (device-built p2p messages) ------------------
+
+
+@dataclass(frozen=True)
+class CompiledRankMessage:
+    """One rank pair's batched halo message, lowered to device index arrays.
+
+    The message payload for the pair is a single ``(num_cells, C)`` array per
+    field (``C`` = product of the field's leading component axes, e.g. Q for
+    PDFs), built *on the sender's device* by concatenating the ``gather``
+    segments in order — resampling (fine->coarse coalescence, coarse->fine
+    replication) happens sender-side exactly as in :class:`RankHaloPlan`,
+    with the canonical fixed-order octet sum so device == host bitwise. The
+    receiver writes the payload into its own buffers by walking the
+    ``scatter`` segments over the same consecutive cell ranges, so sender and
+    receiver lowering agree by construction (both sides are emitted by the
+    same loop in :func:`compile_rank_halo_plan`).
+
+    ``gather`` entries are ``(src_level, kind, src_slot, src_cell)`` — slots
+    index the *sender's* rank-local per-level buffers; ``src_cell`` is
+    ``(N,)`` or ``(N, 8)`` as in :class:`CompiledGhostOp`. ``scatter``
+    entries are ``(dst_level, dst_slot, dst_cell, ncells)`` — slots index the
+    *receiver's* rank-local buffers. ``nbytes`` is the payload size the
+    ``Comm`` fabric accounts for the pair (identical to the host-plan patch
+    bytes, so Table-1 numbers are mode-independent).
+    """
+
+    src_rank: int
+    dst_rank: int
+    field: str
+    nbytes: int
+    num_cells: int
+    gather: tuple[tuple[int, str, np.ndarray, np.ndarray], ...]
+    scatter: tuple[tuple[int, np.ndarray, np.ndarray, int], ...]
+
+    @property
+    def key(self) -> tuple[int, int, str]:
+        """Routing key carried alongside the payload on the fabric."""
+        return (self.src_rank, self.dst_rank, self.field)
+
+
+@dataclass(frozen=True)
+class CompiledRankHaloPlan:
+    """A sharded ghost exchange lowered to pure index arithmetic per rank.
+
+    The device analogue of :class:`RankHaloPlan`: ``local[r]`` is rank r's
+    intra-rank exchange as a :class:`CompiledGhostPlan` over its *rank-local*
+    arena slots (executable inside r's jitted program), and ``messages``
+    holds one :class:`CompiledRankMessage` per (communicating rank pair,
+    field) — so the ``Comm`` fabric still sees exactly one p2p message per
+    neighboring rank pair per exchange, only now the payload is a
+    device-built buffer instead of a list of host patches. Valid as long as
+    the forest topology and every rank's slot assignment are unchanged
+    (callers key caches on ``RankArenas.version``).
+    """
+
+    fields: tuple[str, ...]
+    levels: frozenset[int] | None
+    local: dict[int, CompiledGhostPlan]
+    messages: tuple[CompiledRankMessage, ...]
+
+    def rank_pairs(self) -> set[tuple[int, int]]:
+        return {(m.src_rank, m.dst_rank) for m in self.messages}
+
+    def cross_rank_bytes(self) -> int:
+        return sum(m.nbytes for m in self.messages)
+
+
+def compile_rank_halo_plan(
+    forest: BlockForest,
+    spec: LBMBlockSpec | FieldRegistry,
+    rank_slots: dict[int, dict[int, dict[int, int]]],
+    *,
+    fields: tuple[str, ...] = ("pdf",),
+    levels: set[int] | None = None,
+) -> CompiledRankHaloPlan:
+    """Lower :func:`build_rank_halo_plan`'s ownership-split exchange into
+    flat gather/scatter index arrays addressed by *rank-local* arena slots.
+
+    Args:
+        forest: the block forest (``Block.owner`` decides intra vs cross).
+        spec: :class:`~repro.lbm.grid.LBMBlockSpec` or
+            :class:`~repro.core.fields.FieldRegistry`, as in
+            :func:`build_ghost_plan`.
+        rank_slots: rank -> level -> bid -> slot, i.e.
+            ``{r: {l: arenas.per_rank[r].slots(l)}}`` for a
+            :class:`~repro.core.fields.RankArenas` — every block must appear
+            in its owner's slot map (sources are never level-restricted).
+        fields: names of the fields to exchange.
+        levels: restrict exchange targets to these levels (``None`` = all).
+
+    Returns:
+        A :class:`CompiledRankHaloPlan`. Intra-rank copies become per-rank
+        :class:`CompiledGhostOp` batches; cross-rank patches become
+        per-rank-pair :class:`CompiledRankMessage` specs whose payloads are
+        gathered on the sender's device and scattered on the receiver's.
+
+    This is the same treatment :func:`compile_ghost_plan` gave the
+    single-arena region lists, applied to the sharded plan: the host-side
+    numpy patch resampling of :func:`run_rank_halo_plan` disappears, and the
+    only per-substep host involvement left is routing the (device-resident)
+    message buffers through the ``Comm`` fabric.
+    """
+    groups = _field_groups(spec, fields)
+    geom = forest.geom
+    by_id: dict[int, Block] = {b.bid: b for b in forest.all_blocks()}
+    local_acc: dict[int, dict[tuple, list[tuple]]] = {}
+    # (src_rank, dst_rank, field) -> (src_level, kind) -> aligned seg lists
+    msg_acc: dict[tuple, dict[tuple, list[tuple]]] = {}
+    lead: dict[str, int] = {}
+    itemsize: dict[str, int] = {}
+    if isinstance(spec, FieldRegistry):
+        for name in fields:
+            fs = spec.fields[name]
+            lead[name] = int(np.prod(fs.shape, dtype=np.int64)) if fs.shape else 1
+            itemsize[name] = np.dtype(fs.dtype).itemsize
+    else:
+        for name in fields:
+            lead[name] = spec.lattice.Q if name == "pdf" else 1
+            itemsize[name] = np.dtype(spec.dtype).itemsize
+    for blk in by_id.values():
+        if levels is not None and blk.level not in levels:
+            continue
+        t_slot = rank_slots[blk.owner][blk.level][blk.bid]
+        for nbid in blk.neighbors:
+            nb = by_id[nbid]
+            s_slot = rank_slots[nb.owner][nb.level][nbid]
+            for sp, names in groups:
+                reg = ghost_regions(geom, sp, blk, nbid, nb.level)
+                if reg is None:
+                    continue
+                target, (kind, src) = reg
+                tgt_cell, src_cell = _lower_region_cells(sp, target, kind, src)
+                n = tgt_cell.size
+                dst_slot = np.full(n, t_slot, dtype=np.int32)
+                src_slot = np.full(src_cell.shape, s_slot, dtype=np.int32)
+                for name in names:
+                    if nb.owner == blk.owner:
+                        local_acc.setdefault(blk.owner, {}).setdefault(
+                            (name, blk.level, nb.level, kind), []
+                        ).append((dst_slot, tgt_cell, src_slot, src_cell))
+                    else:
+                        # data flows owner(neighbor) -> owner(block); one
+                        # aligned append per side keeps sender gather order
+                        # == receiver scatter order by construction
+                        msg_acc.setdefault(
+                            (nb.owner, blk.owner, name), {}
+                        ).setdefault((nb.level, kind), []).append(
+                            (src_slot, src_cell, blk.level, dst_slot, tgt_cell)
+                        )
+    local = {
+        rank: CompiledGhostPlan(
+            fields=tuple(fields),
+            levels=None if levels is None else frozenset(levels),
+            ops=tuple(
+                CompiledGhostOp(
+                    field=name,
+                    dst_level=dl,
+                    src_level=sl,
+                    kind=kind,
+                    dst_slot=np.concatenate([e[0] for e in entries]),
+                    dst_cell=np.concatenate([e[1] for e in entries]).astype(np.int32),
+                    src_slot=np.concatenate([e[2] for e in entries]),
+                    src_cell=np.concatenate([e[3] for e in entries]).astype(np.int32),
+                )
+                for (name, dl, sl, kind), entries in sorted(acc.items())
+            ),
+        )
+        for rank, acc in local_acc.items()
+    }
+    messages = []
+    for (src_rank, dst_rank, name), seg_map in sorted(msg_acc.items()):
+        gather, scatter, total = [], [], 0
+        for (src_level, kind), entries in sorted(seg_map.items()):
+            g_slot = np.concatenate([e[0] for e in entries])
+            g_cell = np.concatenate([e[1] for e in entries]).astype(np.int32)
+            gather.append((src_level, kind, g_slot, g_cell))
+            # within a (src_level, kind) segment all dst levels agree (the
+            # kind fixes the level offset), so one scatter segment suffices
+            dst_levels = {e[2] for e in entries}
+            assert len(dst_levels) == 1, (src_rank, dst_rank, name, dst_levels)
+            d_slot = np.concatenate([e[3] for e in entries])
+            d_cell = np.concatenate([e[4] for e in entries]).astype(np.int32)
+            scatter.append((dst_levels.pop(), d_slot, d_cell, int(d_cell.size)))
+            total += int(d_cell.size)
+        messages.append(
+            CompiledRankMessage(
+                src_rank=src_rank,
+                dst_rank=dst_rank,
+                field=name,
+                nbytes=total * lead[name] * itemsize[name],
+                num_cells=total,
+                gather=tuple(gather),
+                scatter=tuple(scatter),
+            )
+        )
+    return CompiledRankHaloPlan(
+        fields=tuple(fields),
+        levels=None if levels is None else frozenset(levels),
+        local=local,
+        messages=tuple(messages),
+    )

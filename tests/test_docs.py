@@ -1,0 +1,54 @@
+"""Tier-1 wrapper around the markdown link-and-path checker.
+
+The CI fast tier runs ``python tools/check_docs.py`` directly; this test
+runs the same engine so a module rename that orphans a README /
+ARCHITECTURE / CHANGES reference fails an ordinary ``pytest`` run too.
+"""
+
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+
+from check_docs import DOCS, _module_exists, collect_errors  # noqa: E402
+
+
+def test_committed_docs_have_no_dead_references():
+    errors = collect_errors(ROOT)
+    assert not errors, "\n".join(errors)
+
+
+def test_architecture_doc_exists_and_is_checked():
+    assert (ROOT / "ARCHITECTURE.md").exists()
+    assert "ARCHITECTURE.md" in DOCS
+
+
+def test_checker_detects_dead_references(tmp_path):
+    """The checker must actually catch rot, not just pass vacuously."""
+    (tmp_path / "src" / "repro" / "core").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "__init__.py").touch()
+    (tmp_path / "src" / "repro" / "core" / "__init__.py").touch()
+    (tmp_path / "src" / "repro" / "core" / "fields.py").touch()
+    (tmp_path / "README.md").write_text(
+        "see [the guide](docs/missing.md) and `src/repro/core/gone.py`;\n"
+        "`repro.core.fields.LevelArena` is fine, `repro.core.arenas` is not,\n"
+        "and `src/repro/core/fields.py` is fine too.\n"
+    )
+    errors = collect_errors(tmp_path)
+    dead = {e.split("dead ")[1] for e in errors}
+    assert "md-link reference: 'docs/missing.md'" in dead
+    assert "path reference: 'src/repro/core/gone.py'" in dead
+    assert "module reference: 'repro.core.arenas'" in dead
+    assert len(errors) == 3, errors
+
+
+def test_module_resolver_accepts_attribute_tails(tmp_path):
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "__init__.py").touch()
+    (tmp_path / "src" / "repro" / "halo.py").touch()
+    assert _module_exists(tmp_path, "repro.halo")
+    assert _module_exists(tmp_path, "repro.halo.compile_ghost_plan")
+    assert not _module_exists(tmp_path, "repro.missing")
+    # a bare-package prefix must not vouch for a missing submodule
+    assert not _module_exists(tmp_path, "repro.missing.deep.attr")

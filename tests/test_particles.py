@@ -95,9 +95,12 @@ def test_sharded_particles_match_single_rank_reference(reference, nranks):
     np.testing.assert_allclose(got["vel"], ref["vel"], rtol=0, atol=1e-10)
 
 
-@pytest.mark.parametrize("mode", ["arena", "fused"])
-def test_host_and_device_modes_match_reference(reference, mode):
-    sim = _run(mode, 1)
+@pytest.mark.parametrize(
+    "mode, nranks",
+    [("arena", 1), ("fused", 1), ("fused_sharded", 1), ("fused_sharded", 4)],
+)
+def test_host_and_device_modes_match_reference(reference, mode, nranks):
+    sim = _run(mode, nranks)
     ref = all_particles(reference.forest)
     got = all_particles(sim.forest)
     np.testing.assert_array_equal(got["id"], ref["id"])

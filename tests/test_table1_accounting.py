@@ -92,6 +92,27 @@ def test_per_rank_held_bytes_bounded_as_ranks_grow(diffusion_runs):
     )
 
 
+def test_fused_sharded_cycle_keeps_the_table1_shape():
+    """The device-resident sharded mode must not change the collective shape
+    of the cycle: the compiled rank-halo exchange routes device-built
+    buffers as the same one-message-per-rank-pair p2p traffic, so a full
+    stepping + AMR + stepping cycle (with live particle traffic) still
+    records zero allgathers and collective-free halo/particle stages."""
+    cfg = dict(BASE, stepping_mode="fused_sharded")
+    sim = AMRLBM(LidDrivenCavityConfig(nranks=4, balancer="diffusion-pushpull", **cfg))
+    sim.advance(2)
+    sim.adapt()
+    assert sim.amr_cycles >= 1
+    sim.advance(2)
+    assert sim.comm.stats.allgather_calls == 0
+    # the device-message exchange is attributed under "fused": p2p only
+    assert sim.data_stats["fused"].p2p_bytes > 0
+    assert sim.data_stats["fused"].collective_bytes_per_rank == 0
+    assert sim.data_stats["halo"].collective_bytes_per_rank == 0
+    assert sim.total_particles() > 0 and sim.particles_advected > 0
+    assert sim.data_stats["particles"].collective_bytes_per_rank == 0
+
+
 def test_sfc_allgather_is_the_positive_control():
     s4 = _run(4, "morton")
     s16 = _run(16, "morton")

@@ -1,0 +1,127 @@
+"""Markdown link-and-path checker for the committed docs.
+
+Docs rot silently: a module rename leaves README/ARCHITECTURE sections
+pointing at files that no longer exist, and nothing fails. This checker
+makes that rot loud. Over the repo-root markdown docs (README.md,
+ARCHITECTURE.md, CHANGES.md, ROADMAP.md) it verifies:
+
+* **relative markdown links** — ``[text](path)`` targets (anchors stripped)
+  must exist on disk; external ``http(s)``/``mailto`` links and pure
+  ``#anchor`` links are skipped;
+* **tree paths** — any reference to ``src/...``, ``tests/...``,
+  ``benchmarks/...``, ``examples/...`` or a ``BENCH_*.json`` trajectory must
+  name an existing file or directory;
+* **dotted module names** — ``repro.x.y...`` / ``benchmarks.x`` references
+  must have a resolvable module prefix under ``src/`` (or the repo root):
+  ``repro.core.fields.LevelArena`` is fine because ``repro.core.fields``
+  resolves; ``repro.core.arenas`` fails because no prefix beyond the bare
+  package does.
+
+Run it directly (CI fast tier does)::
+
+    python tools/check_docs.py            # exit 1 + report on any dead ref
+    python tools/check_docs.py --verbose  # also list every checked ref
+
+``tests/test_docs.py`` runs the same engine as part of tier-1, so a rename
+that breaks a doc reference fails the ordinary test run too.
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+DOCS = ("README.md", "ARCHITECTURE.md", "CHANGES.md", "ROADMAP.md")
+
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_TREE_PATH = re.compile(r"\b((?:src|tests|benchmarks|examples)/[A-Za-z0-9_/.\-]+)")
+_BENCH_FILE = re.compile(r"\b(BENCH_[A-Za-z0-9_]+\.json)\b")
+_DOTTED = re.compile(r"\b((?:repro|benchmarks)(?:\.[A-Za-z_][A-Za-z0-9_]*)+)")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+
+def _strip_punct(path: str) -> str:
+    return path.rstrip(".,;:)`'\"")
+
+
+def _path_exists(root: Path, ref: str) -> bool:
+    return (root / ref).exists()
+
+
+def _module_exists(root: Path, dotted: str) -> bool:
+    """True iff the dotted name resolves to a module path. Trailing segments
+    may be classes/functions, but only after a module *file*:
+    ``repro.core.fields.LevelArena`` resolves via ``fields.py``, while a
+    bare package prefix (``repro.core`` for ``repro.core.arenas``) does not
+    vouch for a missing submodule — the full name must then match a package
+    itself. (The checker validates module paths, not API surfaces.)"""
+    parts = dotted.split(".")
+    for k in range(len(parts), 1, -1):
+        for base in (root / "src", root):
+            p = base.joinpath(*parts[:k])
+            if p.with_suffix(".py").exists():
+                return True  # module file: trailing segments are attributes
+            if (p / "__init__.py").exists():
+                # package: a longer prefix already failed to resolve, so only
+                # an exact full-name match counts
+                return k == len(parts)
+    return False
+
+
+def check_file(root: Path, doc: Path) -> list[tuple[int, str, str]]:
+    """Return (line number, kind, reference) for every dead reference."""
+    errors: list[tuple[int, str, str]] = []
+    for lineno, line in enumerate(doc.read_text().splitlines(), start=1):
+        for m in _MD_LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(_SKIP_SCHEMES):
+                continue
+            target = _strip_punct(target.split("#", 1)[0])
+            if target and not _path_exists(root, target):
+                errors.append((lineno, "md-link", target))
+        for m in _TREE_PATH.finditer(line):
+            ref = _strip_punct(m.group(1))
+            if not _path_exists(root, ref):
+                errors.append((lineno, "path", ref))
+        for m in _BENCH_FILE.finditer(line):
+            if not _path_exists(root, m.group(1)):
+                errors.append((lineno, "path", m.group(1)))
+        for m in _DOTTED.finditer(line):
+            if not _module_exists(root, m.group(1)):
+                errors.append((lineno, "module", m.group(1)))
+    return errors
+
+
+def collect_errors(root: Path | None = None) -> list[str]:
+    """All dead references across the checked docs, as printable strings."""
+    root = root or Path(__file__).resolve().parents[1]
+    out: list[str] = []
+    for name in DOCS:
+        doc = root / name
+        if not doc.exists():
+            continue  # ARCHITECTURE.md may not exist in forks/subsets
+        for lineno, kind, ref in check_file(root, doc):
+            out.append(f"{name}:{lineno}: dead {kind} reference: {ref!r}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(prog="check_docs")
+    ap.add_argument("--verbose", action="store_true",
+                    help="list the checked docs even when clean")
+    args = ap.parse_args()
+    root = Path(__file__).resolve().parents[1]
+    errors = collect_errors(root)
+    if args.verbose or errors:
+        checked = [n for n in DOCS if (root / n).exists()]
+        print(f"check_docs: checked {', '.join(checked)}")
+    if errors:
+        print("\n".join(errors))
+        sys.exit(f"check_docs: {len(errors)} dead reference(s)")
+    print("check_docs: OK")
+
+
+if __name__ == "__main__":
+    main()
