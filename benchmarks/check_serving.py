@@ -1,0 +1,57 @@
+"""CI guard for the BENCH_serving.json trajectory.
+
+Fails (exit 1) when a serving benchmark run did not actually append to the
+trajectory, or when an appended entry's schema drifted from the pinned
+contract. Shared engine: :mod:`benchmarks.trajcheck`. Usage (see
+.github/workflows/ci.yml):
+
+    N=$(python -m benchmarks.check_serving --count)
+    python -m benchmarks.run --only serving --quick
+    python -m benchmarks.check_serving --prev-count "$N" --min-new 1
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from .trajcheck import run_check
+
+TRAJ = Path(__file__).resolve().parents[1] / "BENCH_serving.json"
+
+SCHEMA: dict[str, type | tuple[type, ...]] = {
+    "scenario": str,
+    "quick": bool,
+    "njobs": int,
+    "coarse_steps": int,
+    "amr_interval": int,
+    "sequential_jobs_per_s": (int, float),
+    "batched_jobs_per_s": (int, float),
+    "batched_speedup": (int, float),
+    "compile_hits": int,
+    "compile_misses": int,
+    "compile_cache_hit_rate": (int, float),
+    "divergence_splits": int,
+}
+
+
+def _check_extra(i: int, entry: dict) -> list[str]:
+    errs = []
+    rate = entry.get("compile_cache_hit_rate")
+    if isinstance(rate, (int, float)) and not (0.0 <= rate <= 1.0):
+        errs.append(f"entry {i}: compile_cache_hit_rate {rate} outside [0, 1]")
+    for key in ("sequential_jobs_per_s", "batched_jobs_per_s"):
+        v = entry.get(key)
+        if isinstance(v, (int, float)) and v <= 0:
+            errs.append(f"entry {i}: {key} must be positive, got {v}")
+    return errs
+
+
+def main() -> None:
+    run_check(
+        prog="check_serving", traj_path=TRAJ, schema=SCHEMA,
+        check_extra=_check_extra,
+    )
+
+
+if __name__ == "__main__":
+    main()

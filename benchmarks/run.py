@@ -21,6 +21,9 @@ Mapping to the paper:
   particles          Lagrangian tracer layer: particles/s advected (RK2 +
                      redistribution) per stepping mode + redistribution p2p
                      bytes per step, appended to BENCH_particles.json
+  serving            serving layer: batched ensemble vs sequential execution
+                     of identical jobs — jobs/s, speedup, and compile-cache
+                     hit rate, appended to BENCH_serving.json
   roofline           §Roofline: renders the dry-run artifact table
 """
 
@@ -214,7 +217,9 @@ def stepping(
 
     Single runs on a shared host are noise-bound (observed ~1.6x swings), so
     every timing is best-of-``best_of`` (default 2 quick / 3 full)."""
-    from repro.lbm import AMRLBM, LidDrivenCavityConfig
+    from repro.lbm import AMRLBM
+
+    from .scenario import cavity_config
 
     coarse = steps if steps is not None else (2 if quick else 4)
     k = best_of if best_of is not None else (2 if quick else 3)
@@ -233,17 +238,8 @@ def stepping(
             if mode not in rank_dependent and mode in baseline:
                 results[mode], wall[mode], halo_bytes[mode] = baseline[mode]
             else:
-                cfg = LidDrivenCavityConfig(
-                    root_grid=(2, 2, 2),
-                    cells_per_block=cells,
-                    nranks=nranks,
-                    omega=1.5,
-                    u_lid=(0.08, 0.0, 0.0),
-                    max_level=1,
-                    refine_upper=0.03,
-                    refine_lower=0.004,
-                    stepping_mode=mode,
-                    kernel_backend="ref",  # interpret-mode pallas would mask the data-path cost
+                cfg = cavity_config(
+                    nranks=nranks, stepping_mode=mode, cells_per_block=cells
                 )
                 sim = AMRLBM(cfg)
                 sim.advance(1)  # warm up the L0 stepper jit
@@ -331,25 +327,19 @@ def particles(quick: bool = False) -> None:
     stepping mode, plus redistribution p2p bytes and block moves per coarse
     step. Tracers are clustered under the lid so the run exercises the
     heterogeneous cells + alpha*N load model and real redistribution."""
-    from repro.lbm import AMRLBM, LidDrivenCavityConfig
+    from repro.lbm import AMRLBM
     from repro.particles import ParticlesConfig
+
+    from .scenario import cavity_config
 
     per_block = 64 if quick else 256
     coarse = 2 if quick else 4
     nranks = 4
     traj_entries = []
     for mode in ("arena", "sharded"):
-        cfg = LidDrivenCavityConfig(
-            root_grid=(2, 2, 2),
-            cells_per_block=(8, 8, 8),
+        cfg = cavity_config(
             nranks=nranks,
-            omega=1.5,
-            u_lid=(0.08, 0.0, 0.0),
-            max_level=1,
-            refine_upper=0.03,
-            refine_lower=0.004,
             stepping_mode=mode,
-            kernel_backend="ref",
             particles=ParticlesConfig(
                 per_block=per_block,
                 seed=1,
@@ -389,6 +379,72 @@ def particles(quick: bool = False) -> None:
     _append_trajectory("particles", "BENCH_particles.json", traj_entries)
 
 
+def serving(quick: bool = False) -> None:
+    """Serving-layer amortization: the same 4 identical jobs executed as one
+    batched ensemble (shared compiled superstep, per-member coefficients as
+    batched operands) vs sequentially as independent fused runs (each paying
+    its own program compiles). Emits jobs/s for both paths, the speedup, and
+    the batched path's compile-cache hit rate; appends to the
+    BENCH_serving.json trajectory (guarded by benchmarks/check_serving.py)."""
+    from repro.serving import JobSpec, SimulationService
+
+    from .scenario import cavity_config
+
+    njobs = 4
+    steps = 8 if quick else 12
+    interval = 4
+
+    def run_jobs(batching: bool) -> tuple[float, SimulationService]:
+        svc = SimulationService(batching=batching)
+        # sequential baseline = today's best solo path (device-resident fused)
+        mode = "arena" if batching else "fused"
+        for _ in range(njobs):
+            svc.submit(
+                JobSpec(
+                    config=cavity_config(stepping_mode=mode),
+                    coarse_steps=steps,
+                    amr_interval=interval,
+                    collect_diagnostics=False,
+                )
+            )
+        t0 = time.perf_counter()
+        svc.run()
+        return time.perf_counter() - t0, svc
+
+    seq_dt, _seq = run_jobs(batching=False)
+    bat_dt, bat = run_jobs(batching=True)
+    seq_jps = njobs / seq_dt
+    bat_jps = njobs / bat_dt
+    speedup = bat_jps / seq_jps
+    s = bat.summary()
+    _csv("serving/sequential", "jobs_per_s", round(seq_jps, 3))
+    _csv("serving/batched", "jobs_per_s", round(bat_jps, 3))
+    _csv("serving", "batched_speedup", round(speedup, 3))
+    _csv("serving", "compile_cache_hit_rate", round(s["compile_cache_hit_rate"], 3))
+    _csv("serving", "compile_misses", s["compile_misses"])
+    _csv("serving", "divergence_splits", s["divergence_splits"])
+    _append_trajectory(
+        "serving",
+        "BENCH_serving.json",
+        [
+            {
+                "scenario": "lid-driven-cavity",
+                "quick": quick,
+                "njobs": njobs,
+                "coarse_steps": steps,
+                "amr_interval": interval,
+                "sequential_jobs_per_s": round(seq_jps, 3),
+                "batched_jobs_per_s": round(bat_jps, 3),
+                "batched_speedup": round(speedup, 3),
+                "compile_hits": s["compile_hits"],
+                "compile_misses": s["compile_misses"],
+                "compile_cache_hit_rate": round(s["compile_cache_hit_rate"], 3),
+                "divergence_splits": s["divergence_splits"],
+            }
+        ],
+    )
+
+
 def roofline(quick: bool = False) -> None:
     """Render the §Roofline table from the dry-run artifacts."""
     import json
@@ -420,6 +476,7 @@ ALL = {
     "lbm_mlups": lbm_mlups,
     "stepping": stepping,
     "particles": particles,
+    "serving": serving,
     "roofline": roofline,
 }
 

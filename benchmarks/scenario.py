@@ -14,7 +14,42 @@ from __future__ import annotations
 from repro.core import Comm, ForestGeometry, make_uniform_forest
 from repro.core.forest import BlockForest
 
-__all__ = ["build_scenario", "stress_marks"]
+__all__ = ["build_scenario", "cavity_config", "stress_marks"]
+
+
+def cavity_config(
+    *,
+    nranks: int = 1,
+    stepping_mode: str = "arena",
+    cells_per_block: tuple[int, int, int] = (8, 8, 8),
+    omega: float = 1.5,
+    u_lid: tuple[float, float, float] = (0.08, 0.0, 0.0),
+    kernel_backend: str = "ref",
+    particles=None,
+):
+    """The canonical benchmark lid-driven-cavity scenario, declared once.
+
+    Every driver-level bench (stepping, particles, serving) runs this config:
+    a 2x2x2 root grid with one refinement level developing under the lid,
+    matching the conformance-test setup so benchmark numbers and correctness
+    tests exercise the same scenario. Keyword overrides cover the axes the
+    benches sweep (rank count, stepping mode, block size, physics, tracers).
+    """
+    from repro.lbm import LidDrivenCavityConfig
+
+    return LidDrivenCavityConfig(
+        root_grid=(2, 2, 2),
+        cells_per_block=cells_per_block,
+        nranks=nranks,
+        omega=omega,
+        u_lid=u_lid,
+        max_level=1,
+        refine_upper=0.03,
+        refine_lower=0.004,
+        stepping_mode=stepping_mode,
+        kernel_backend=kernel_backend,  # interpret-mode pallas would mask the data-path cost
+        particles=particles,
+    )
 
 
 def build_scenario(nranks: int, *, blocks_per_rank: int = 8) -> tuple[BlockForest, ForestGeometry]:

@@ -1,7 +1,8 @@
 """Shared engine for the committed benchmark-trajectory CI guards.
 
-Each guarded trajectory (``BENCH_stepping.json``, ``BENCH_particles.json``)
-gets a thin CLI wrapper (``check_stepping.py`` / ``check_particles.py``)
+Each guarded trajectory (``BENCH_stepping.json``, ``BENCH_particles.json``,
+``BENCH_serving.json``) gets a thin CLI wrapper (``check_stepping.py`` /
+``check_particles.py`` / ``check_serving.py``)
 that supplies its path, pinned entry schema, and any extra per-entry rules;
 the load/count/append/schema semantics live here exactly once, so the
 guards cannot drift apart. Protocol (see .github/workflows/ci.yml):

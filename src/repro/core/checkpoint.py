@@ -11,6 +11,13 @@ are redistributed along the Morton curve (the standard initial partition),
 and the payloads are deserialized on their new owners — "loading the
 previously created snapshot" followed by the data structure initialization
 of [57]. A subsequent AMR cycle rebalances if required.
+
+The two halves of that protocol are exposed separately as
+:func:`snapshot_payloads` (registry-codec encode of every block) and
+:func:`rebuild_forest` (Morton redistribution + decode onto the new owners),
+so in-memory consumers — the elastic rank-resize in
+:mod:`repro.serving.elastic` — can run the identical snapshot/restore path
+without touching disk.
 """
 
 from __future__ import annotations
@@ -18,12 +25,64 @@ from __future__ import annotations
 import json
 import pickle
 from pathlib import Path
+from typing import Any
 
 from .blockid import ForestGeometry
 from .forest import Block, BlockForest, build_adjacency
 from .migration import BlockDataRegistry
 
-__all__ = ["save_checkpoint", "load_checkpoint"]
+__all__ = [
+    "save_checkpoint",
+    "load_checkpoint",
+    "snapshot_payloads",
+    "rebuild_forest",
+]
+
+
+def snapshot_payloads(
+    forest: BlockForest, registry: BlockDataRegistry, *, copy: bool = False
+) -> dict[int, dict[str, Any]]:
+    """Move-serialize every block's data through the registry codec.
+
+    Returns bid -> payload for the whole forest — the in-memory equivalent of
+    the per-rank checkpoint payload files. With ``copy=False`` payloads alias
+    the live arrays (safe when immediately persisted or decoded, as both the
+    on-disk checkpoint and the elastic resize do); pass ``copy=True`` to keep
+    a snapshot that survives later in-place mutation.
+    """
+    return {
+        bid: registry.encode_block(blk, copy=copy)
+        for r in range(forest.nranks)
+        for bid, blk in forest.local_blocks(r).items()
+    }
+
+
+def rebuild_forest(
+    geom: ForestGeometry,
+    entries: list[dict],
+    payloads: dict[int, dict[str, Any]],
+    registry: BlockDataRegistry,
+    nranks: int,
+) -> BlockForest:
+    """Reassemble a forest from topology entries + codec payloads onto
+    ``nranks`` ranks: blocks are redistributed in equal contiguous chunks
+    along the Morton curve (the standard initial partition) and each payload
+    is deserialized on its new owner. ``entries`` holds one
+    ``{"bid", "level", "weight"}`` dict per block (the topology-file rows;
+    any previous ``owner`` is irrelevant — ownership is recomputed)."""
+    entries = sorted(entries, key=lambda e: geom.morton_key(e["bid"]))
+    forest = BlockForest(geom, nranks)
+    blocks = []
+    n = len(entries)
+    for i, e in enumerate(entries):
+        owner = min(nranks - 1, i * nranks // max(1, n))
+        blk = Block(bid=e["bid"], level=e["level"], owner=owner, weight=e["weight"])
+        blk.data = registry.decode_block(payloads[e["bid"]], blk)
+        blocks.append(blk)
+    build_adjacency(geom, blocks)
+    for b in blocks:
+        forest.insert(b)
+    return forest
 
 
 def save_checkpoint(
@@ -68,18 +127,4 @@ def load_checkpoint(
     for r in range(old_nranks):
         with open(path / f"rank_{r:06d}.pkl", "rb") as f:
             payloads.update(pickle.load(f))
-
-    entries = topo["blocks"]
-    entries.sort(key=lambda e: geom.morton_key(e["bid"]))
-    forest = BlockForest(geom, nranks)
-    blocks = []
-    n = len(entries)
-    for i, e in enumerate(entries):
-        owner = min(nranks - 1, i * nranks // max(1, n))
-        blk = Block(bid=e["bid"], level=e["level"], owner=owner, weight=e["weight"])
-        blk.data = registry.decode_block(payloads[e["bid"]], blk)
-        blocks.append(blk)
-    build_adjacency(geom, blocks)
-    for b in blocks:
-        forest.insert(b)
-    return forest
+    return rebuild_forest(geom, topo["blocks"], payloads, registry, nranks)

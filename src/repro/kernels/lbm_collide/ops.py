@@ -16,7 +16,7 @@ import numpy as np
 
 from ...lbm.lattice import D3Q19, Lattice
 from .lbm_collide import lbm_stream_collide_pallas
-from .ref import stream_collide_ref
+from .ref import stream_collide_coeffs, stream_collide_ref
 
 __all__ = [
     "fused_stream_collide",
@@ -24,6 +24,7 @@ __all__ = [
     "make_arena_stream_collide",
     "apply_compiled_ghost_plan",
     "make_fused_superstep",
+    "make_ensemble_superstep",
     "make_rank_emit",
     "make_rank_absorb",
 ]
@@ -255,6 +256,93 @@ def make_fused_superstep(
         return jax.lax.fori_loop(0, nsub, body, pdfs)
 
     return superstep
+
+
+def make_ensemble_superstep(
+    *,
+    levels,
+    plans,
+    masks,
+    lattice: Lattice = D3Q19,
+    collision: str = "bgk",
+    unroll_limit: int = 32,
+):
+    """Compile one coarse step for a whole *ensemble* of independent members
+    sharing one forest topology: :func:`make_fused_superstep` with a leading
+    member axis ``vmap``-ped over per-member physics coefficients.
+
+    Per-member relaxation rates and wall velocities enter as *batched
+    operands* (not closed-over constants), so one compiled program serves
+    every member of the batch — the inference-serving amortization: compile
+    once per (topology, activity-pattern set), dispatch once per coarse step
+    for all members. Because the coefficients are pre-rounded to the field
+    dtype on the host (:func:`~repro.kernels.lbm_collide.ref.collision_coeffs`)
+    and only ever combine as ``coefficient * array``, each member's slice of
+    the batched program is bitwise-identical to a solo fused run with the
+    same parameters.
+
+    Args:
+        levels: refinement levels in use (ascending buffer-tuple order).
+        plans: pattern index ``p`` (0..lmax) -> compiled ghost plan for the
+            active set ``{l : l >= lmax - p}`` (per-*member* slot layout —
+            all members share it, since they share the topology).
+        masks: level -> (B, X, Y, Z) mask stack shared by every member.
+        lattice / collision: the (topology-compatible) kernel configuration
+            shared by the whole ensemble.
+
+    Returns:
+        A jitted ``superstep(pdfs: tuple, coeffs: dict) -> tuple`` advancing
+        one coarse step: ``pdfs`` holds one ``(M, B, Q, X, Y, Z)`` buffer per
+        level (``M`` = ensemble members, leading axis), ``coeffs`` maps level
+        -> per-member coefficient arrays (leading ``M`` axis, from
+        ``collision_coeffs`` stacked across members).
+    """
+    levels = tuple(sorted(levels))
+    index = {l: i for i, l in enumerate(levels)}
+    lmax = levels[-1]
+    nsub = 1 << lmax
+    masks_t = tuple(jnp.asarray(masks[l]) for l in levels)
+
+    def step_level(fb: jax.Array, mb: jax.Array, coeffs: dict) -> jax.Array:
+        return jax.vmap(
+            lambda f, m: stream_collide_coeffs(
+                f, m, coeffs, lattice=lattice, collision=collision
+            )
+        )(fb, mb)
+
+    def make_branch(p: int):
+        active = tuple(l for l in levels if l >= lmax - p)
+        ops = _device_plan_ops(plans[p], index)
+
+        def branch(carry):
+            pdfs, coeffs = carry
+            bufs = _run_plan_ops(ops, list(pdfs))
+            for l in sorted(active, reverse=True):  # finest first, matching
+                i = index[l]  # the solo fused superstep's kernel order
+                bufs[i] = step_level(bufs[i], masks_t[i], coeffs[l])
+            return tuple(bufs), coeffs
+
+        return branch
+
+    branches = [make_branch(p) for p in range(lmax + 1)]
+    pattern = [
+        lmax if s == 0 else min((s & -s).bit_length() - 1, lmax) for s in range(nsub)
+    ]
+
+    def member_superstep(pdfs, coeffs):
+        carry = (tuple(pdfs), coeffs)
+        if nsub <= unroll_limit:
+            for s in range(nsub):
+                carry = branches[pattern[s]](carry)
+            return carry[0]
+        pattern_dev = jnp.asarray(pattern, dtype=jnp.int32)
+
+        def body(s, carry):
+            return jax.lax.switch(pattern_dev[s], branches, carry)
+
+        return jax.lax.fori_loop(0, nsub, body, carry)[0]
+
+    return jax.jit(jax.vmap(member_superstep, in_axes=(0, 0)))
 
 
 def make_rank_emit(messages, level_index: dict[int, int]):

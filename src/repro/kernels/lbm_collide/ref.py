@@ -26,7 +26,16 @@ import numpy as np
 
 from ...lbm.lattice import D3Q19, Lattice
 
-__all__ = ["stream_collide_ref", "equilibrium", "moments", "CT_FLUID", "CT_WALL", "CT_LID"]
+__all__ = [
+    "stream_collide_ref",
+    "stream_collide_coeffs",
+    "collision_coeffs",
+    "equilibrium",
+    "moments",
+    "CT_FLUID",
+    "CT_WALL",
+    "CT_LID",
+]
 
 CT_FLUID = 0
 CT_WALL = 1
@@ -53,22 +62,65 @@ def equilibrium(rho: jnp.ndarray, u: jnp.ndarray, lattice: Lattice) -> jnp.ndarr
     )
 
 
-def stream_collide_ref(
-    f: jnp.ndarray,
-    mask: jnp.ndarray,
+def collision_coeffs(
     omega: float,
+    *,
     lattice: Lattice = D3Q19,
     u_wall: tuple[float, float, float] = (0.0, 0.0, 0.0),
     collision: str = "bgk",
     magic: float = 3.0 / 16.0,
+    dtype=np.float32,
+) -> dict[str, np.ndarray]:
+    """Host-derived per-step scalar coefficients for :func:`stream_collide_coeffs`.
+
+    Every omega/u_wall-dependent quantity the kernel consumes is reduced here
+    to a small set of dtype-precision scalars (and one ``(Q,)`` lid vector),
+    computed in float64 exactly like the original closure path. The kernel
+    then only ever combines them as ``coefficient * array``, so passing them
+    as *traced* operands (the batched ensemble path, one value per member)
+    produces bitwise-identical results to baking them in as constants (the
+    single-run path): the rounding to ``dtype`` happens here, once, either way.
+    """
+    c = np.asarray(lattice.c)
+    w = np.asarray(lattice.w)
+    uw = np.asarray(u_wall, dtype=np.float64)
+    # velocity bounce-back momentum term per direction: 6 w_q (c_q . u_wall)
+    lid = np.array(
+        [6.0 * w[q] * float(c[q] @ uw) for q in range(lattice.Q)], dtype=dtype
+    )
+    if collision == "bgk":
+        return {"lid": lid, "om": dtype(omega)}
+    if collision == "trt":
+        tau_plus = 1.0 / omega
+        tau_minus = magic / (tau_plus - 0.5) + 0.5
+        return {
+            "lid": lid,
+            "om_p": dtype(1.0 / tau_plus),
+            "om_m": dtype(1.0 / tau_minus),
+        }
+    raise ValueError(f"unknown collision model {collision!r}")
+
+
+def stream_collide_coeffs(
+    f: jnp.ndarray,
+    mask: jnp.ndarray,
+    coeffs: dict,
+    *,
+    lattice: Lattice = D3Q19,
+    collision: str = "bgk",
 ) -> jnp.ndarray:
-    """One fused stream+collide step on a single block (Q, X, Y, Z)."""
+    """One fused stream+collide step on a single block (Q, X, Y, Z).
+
+    ``coeffs`` comes from :func:`collision_coeffs` and may hold either host
+    scalars (closed over as constants — the classic path) or traced arrays
+    (per-member physics parameters under ``vmap`` — the ensemble path); both
+    execute the identical op sequence.
+    """
     dtype = f.dtype
     Q = lattice.Q
     c = np.asarray(lattice.c)
-    w = np.asarray(lattice.w)
     opp = np.asarray(lattice.opposite)
-    uw = np.asarray(u_wall, dtype=np.float64)
+    lid = coeffs["lid"]
 
     # -- pull streaming with bounce-back ------------------------------------
     f_in = []
@@ -76,9 +128,7 @@ def stream_collide_ref(
         cq = c[q]
         pulled = jnp.roll(f[q], shift=(int(cq[0]), int(cq[1]), int(cq[2])), axis=(0, 1, 2))
         src_mask = jnp.roll(mask, shift=(int(cq[0]), int(cq[1]), int(cq[2])), axis=(0, 1, 2))
-        bounced = f[opp[q]] + dtype.type(6.0 * w[q] * float(c[q] @ uw)) * (
-            src_mask == CT_LID
-        ).astype(dtype)
+        bounced = f[opp[q]] + lid[q] * (src_mask == CT_LID).astype(dtype)
         f_in.append(jnp.where(src_mask == CT_FLUID, pulled, bounced))
     f_in = jnp.stack(f_in)
 
@@ -86,13 +136,10 @@ def stream_collide_ref(
     rho, u = moments(f_in, lattice)
     feq = equilibrium(rho, u, lattice)
     if collision == "bgk":
-        f_out = f_in + dtype.type(omega) * (feq - f_in)
+        f_out = f_in + coeffs["om"] * (feq - f_in)
     elif collision == "trt":
-        tau_plus = 1.0 / omega
-        lam = magic
-        tau_minus = lam / (tau_plus - 0.5) + 0.5
-        om_p = dtype.type(1.0 / tau_plus)
-        om_m = dtype.type(1.0 / tau_minus)
+        om_p = coeffs["om_p"]
+        om_m = coeffs["om_m"]
         f_opp_in = f_in[opp]
         feq_opp = feq[opp]
         f_plus = 0.5 * (f_in + f_opp_in)
@@ -105,3 +152,24 @@ def stream_collide_ref(
 
     fluid = (mask == CT_FLUID)[None].astype(dtype)
     return f_out * fluid + f * (1 - fluid)
+
+
+def stream_collide_ref(
+    f: jnp.ndarray,
+    mask: jnp.ndarray,
+    omega: float,
+    lattice: Lattice = D3Q19,
+    u_wall: tuple[float, float, float] = (0.0, 0.0, 0.0),
+    collision: str = "bgk",
+    magic: float = 3.0 / 16.0,
+) -> jnp.ndarray:
+    """One fused stream+collide step on a single block (Q, X, Y, Z)."""
+    coeffs = collision_coeffs(
+        omega,
+        lattice=lattice,
+        u_wall=u_wall,
+        collision=collision,
+        magic=magic,
+        dtype=f.dtype.type,
+    )
+    return stream_collide_coeffs(f, mask, coeffs, lattice=lattice, collision=collision)

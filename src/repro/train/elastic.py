@@ -1,101 +1,33 @@
-"""Elastic training control: straggler mitigation + shrink/grow re-meshing.
+"""Deprecated: elasticity control moved to :mod:`repro.serving.elastic`.
 
-The control logic mirrors the paper's resilience design (§4.2) at the
-LM-plane level:
+The seed sketch that lived here (straggler EWMAs -> capacity-weighted bucket
+reassignment, shrink planning) matured into the serving subsystem, where it
+sits next to the data-plane resize (:func:`repro.serving.elastic.resize_ranks`)
+it steers. This module re-exports the moved names so old imports keep
+working, with a :class:`DeprecationWarning`; new code should import from
+``repro.serving.elastic``.
 
-* **straggler mitigation** — per-host step-time EWMAs feed the *same*
-  diffusion balancer that balances AMR blocks: data buckets (blocks,
-  weight = tokens) are reassigned away from slow hosts by scaling their
-  per-rank capacity with the inverse measured throughput;
-* **elastic re-mesh** — on device loss the runner decides the new mesh
-  shape (dropping whole hosts), reload point (last checkpoint), and a
-  rebalanced bucket assignment; the training driver then re-lowers the
-  step function for the new mesh (cheap: scan-based HLO) and resumes.
-
-Deterministic and host-side, so it is fully unit-testable without hardware.
+One behavioral note: the moved ``StragglerMonitor.rebalance_buckets`` /
+``plan_shrink`` default to the self-contained greedy-LPT assignment; pass
+``assign=repro.train.data.diffusion_assign_buckets`` to restore the old
+diffusion-balancer coupling.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import warnings
 
-import numpy as np
+from ..serving.elastic import (  # noqa: F401  (re-exports)
+    ElasticPlan,
+    StragglerMonitor,
+    greedy_assign_buckets,
+    plan_shrink,
+)
 
-from .data import diffusion_assign_buckets
+__all__ = ["StragglerMonitor", "ElasticPlan", "plan_shrink", "greedy_assign_buckets"]
 
-__all__ = ["StragglerMonitor", "ElasticPlan", "plan_shrink"]
-
-
-@dataclass
-class StragglerMonitor:
-    """EWMA step times per host; emits capacity weights for the balancer."""
-
-    n_hosts: int
-    alpha: float = 0.2
-    ewma: np.ndarray = field(default=None)  # type: ignore[assignment]
-
-    def __post_init__(self):
-        if self.ewma is None:
-            self.ewma = np.zeros(self.n_hosts)
-
-    def observe(self, step_times: np.ndarray) -> None:
-        t = np.asarray(step_times, dtype=np.float64)
-        self.ewma = np.where(
-            self.ewma == 0, t, self.alpha * t + (1 - self.alpha) * self.ewma
-        )
-
-    def capacities(self) -> np.ndarray:
-        """Relative per-host throughput (1.0 = median host)."""
-        med = np.median(self.ewma[self.ewma > 0]) if (self.ewma > 0).any() else 1.0
-        caps = np.where(self.ewma > 0, med / np.maximum(self.ewma, 1e-9), 1.0)
-        return np.clip(caps, 0.1, 2.0)
-
-    def rebalance_buckets(self, bucket_tokens: list[float]) -> tuple[list[int], int]:
-        """Assign buckets ~proportionally to measured capacity: bucket weights
-        are scaled by the *inverse* capacity of their candidate rank through
-        virtual duplication — slow hosts present as ranks with fewer slots.
-        Realized by splitting each host into round(cap*K) virtual ranks and
-        running the standard diffusion assignment over them."""
-        K = 4
-        caps = self.capacities()
-        virt_of_host = [max(1, int(round(c * K))) for c in caps]
-        n_virt = sum(virt_of_host)
-        assign_v, iters = diffusion_assign_buckets(bucket_tokens, n_virt)
-        # map virtual ranks back to hosts
-        host_of_virt = []
-        for h, nv in enumerate(virt_of_host):
-            host_of_virt.extend([h] * nv)
-        return [host_of_virt[v] for v in assign_v], iters
-
-
-@dataclass(frozen=True)
-class ElasticPlan:
-    new_hosts: list[int]  # surviving host ids
-    mesh_shape: tuple[int, ...]  # new (data, model) shape
-    resume_step: int
-    bucket_assignment: list[int]
-
-
-def plan_shrink(
-    *,
-    alive_hosts: list[int],
-    chips_per_host: int,
-    model_parallel: int,
-    last_checkpoint_step: int,
-    bucket_tokens: list[float],
-) -> ElasticPlan:
-    """Plan resumption after losing hosts: keep the model axis intact (TP
-    groups must not straddle dead hosts) and shrink the data axis; data
-    buckets are diffusion-rebalanced over the survivors."""
-    total_chips = len(alive_hosts) * chips_per_host
-    assert total_chips % model_parallel == 0, (
-        f"{total_chips} chips cannot keep model_parallel={model_parallel}"
-    )
-    data = total_chips // model_parallel
-    assignment, _ = diffusion_assign_buckets(bucket_tokens, len(alive_hosts))
-    return ElasticPlan(
-        new_hosts=sorted(alive_hosts),
-        mesh_shape=(data, model_parallel),
-        resume_step=last_checkpoint_step,
-        bucket_assignment=assignment,
-    )
+warnings.warn(
+    "repro.train.elastic moved to repro.serving.elastic; this shim will be removed",
+    DeprecationWarning,
+    stacklevel=2,
+)

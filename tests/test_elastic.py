@@ -1,12 +1,14 @@
-"""LM-plane checkpointing + elasticity control logic."""
+"""LM-plane checkpointing + elasticity control logic (now in serving)."""
+
+import warnings
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
 from repro.models.zoo import DistContext, build_model
+from repro.serving.elastic import StragglerMonitor, plan_shrink
 from repro.train.checkpoint import load_train_state, save_train_state
-from repro.train.elastic import StragglerMonitor, plan_shrink
 from repro.train.optimizer import adamw_init
 
 
@@ -54,3 +56,16 @@ def test_plan_shrink_keeps_model_axis():
     assert plan.resume_step == 1000
     assert len(plan.bucket_assignment) == 24
     assert set(plan.bucket_assignment) <= set(range(6))
+
+
+def test_train_elastic_shim_warns_and_reexports():
+    import importlib
+    import sys
+
+    sys.modules.pop("repro.train.elastic", None)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        mod = importlib.import_module("repro.train.elastic")
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert mod.StragglerMonitor is StragglerMonitor
+    assert mod.plan_shrink is plan_shrink
