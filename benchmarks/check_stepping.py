@@ -19,8 +19,8 @@ from .trajcheck import run_check
 
 TRAJ = Path(__file__).resolve().parents[1] / "BENCH_stepping.json"
 
-# entry contract: key -> type(s); "blocks_per_s" additionally must contain
-# every stepping mode the benchmark exercises
+# entry contract: key -> type(s); "blocks_per_s" and "compile_s" additionally
+# must contain every stepping mode the benchmark exercises
 SCHEMA: dict[str, type | tuple[type, ...]] = {
     "scenario": str,
     "cells_per_block": list,
@@ -29,6 +29,7 @@ SCHEMA: dict[str, type | tuple[type, ...]] = {
     "best_of": int,
     "nranks": int,
     "blocks_per_s": dict,
+    "compile_s": dict,
     "arena_speedup": (int, float),
     "fused_speedup": (int, float),
     "sharded_speedup": (int, float),
@@ -45,6 +46,9 @@ def _check_extra(i: int, entry: dict) -> list[str]:
         bps = entry.get("blocks_per_s")
         if isinstance(bps, dict) and not isinstance(bps.get(mode), (int, float)):
             errs.append(f"entry {i}: blocks_per_s[{mode!r}] missing or non-numeric")
+        cs = entry.get("compile_s")
+        if isinstance(cs, dict) and not isinstance(cs.get(mode), (int, float)):
+            errs.append(f"entry {i}: compile_s[{mode!r}] missing or non-numeric")
     return errs
 
 

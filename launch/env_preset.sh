@@ -1,0 +1,61 @@
+#!/usr/bin/env bash
+# Launch preset for the stepping hot loop: allocator + XLA runtime flags.
+#
+# Usage:
+#   launch/env_preset.sh python benchmarks/run.py stepping --size 16 ...
+#   launch/env_preset.sh python -m pytest tests/test_lbm.py -q
+#
+# Wraps any command with the environment the benchmarks are meant to run
+# under. Everything degrades gracefully: tcmalloc is only preloaded when the
+# library exists, XLA flags are appended to (not clobbering) any caller
+# XLA_FLAGS, and PYTHONPATH gains src/ so the repo runs uninstalled.
+#
+# None of the flags below change numerics — fast-math style options are
+# deliberately absent (the conformance suites pin the fused data planes to
+# the host reference at 1e-10, in practice bitwise; see
+# tests/test_distributed_conformance.py).
+set -euo pipefail
+
+repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+
+# -- allocator: tcmalloc if present --------------------------------------------
+# The superstep allocates multi-MB pdf buffers per substep unless donation is
+# on; glibc malloc round-trips those through mmap/munmap (page faults every
+# step). tcmalloc keeps them cached. Probe the usual install names and skip
+# silently when absent (this container ships none).
+for so in \
+    /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+    /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+    /usr/lib/libtcmalloc.so.4; do
+  if [[ -e "$so" ]]; then
+    export LD_PRELOAD="${LD_PRELOAD:+$LD_PRELOAD:}$so"
+    # silence the "large alloc" report for the block arenas (tens of GB at
+    # paper scale); harmless when tcmalloc is not loaded
+    export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+    break
+  fi
+done
+
+# -- logging -------------------------------------------------------------------
+# keep benchmark stdout clean of TF/XLA runtime chatter
+export TF_CPP_MIN_LOG_LEVEL=${TF_CPP_MIN_LOG_LEVEL:-4}
+
+# -- XLA flags -----------------------------------------------------------------
+# Latency-hiding scheduler: overlaps the async-dispatched device work (emit /
+# interior programs) with host-side message routing — the compiled analogue
+# of the paper's communication hiding. The flag lives in the gpu_ namespace
+# of XLA's DebugOptions but is parsed (and ignored) by every backend, so it
+# is safe to set unconditionally. Appended so callers can still add their
+# own flags.
+xla_extra="--xla_gpu_enable_latency_hiding_scheduler=true"
+# Simulated multi-host runs: N XLA host devices from one process. Opt-in via
+# REPRO_HOST_DEVICES because it changes jax.device_count() for everything.
+if [[ -n "${REPRO_HOST_DEVICES:-}" ]]; then
+  xla_extra="$xla_extra --xla_force_host_platform_device_count=${REPRO_HOST_DEVICES}"
+fi
+export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }$xla_extra"
+
+# -- repo on the path ----------------------------------------------------------
+export PYTHONPATH="${repo_root}/src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec "$@"

@@ -12,15 +12,20 @@ stream-collide accounts for nearly all FLOPs of the simulation):
 * Streaming is realized as static single-cell rolls of VMEM-resident planes
   (vector shifts on the VPU — no MXU work exists in LBM), fused with the
   collision so PDFs are read and written exactly once per time step.
-* The ghost layer travels with the block; halo exchange happens outside in
-  the halo/driver layer (jnp gather / collectives), keeping the kernel free
-  of cross-block control flow.
+* The ghost layer travels with the block. The plain entry point
+  (:func:`lbm_stream_collide_pallas`) leaves halo exchange entirely to the
+  halo/driver layer; the halo-aware entry point
+  (:func:`lbm_stream_collide_halo_pallas`) additionally takes the block's
+  exchanged ghost values as a compact per-block operand and scatters them
+  into the VMEM-resident tile *before* streaming — the superstep no longer
+  materializes a separately exchanged full buffer between kernel calls.
 
-The kernel is validated against ``ref.stream_collide_ref`` in interpret mode
-(this container is CPU-only); on TPU the same ``pallas_call`` lowers with the
-block resident in VMEM. For best TPU layout the innermost (Z) extent should
-be padded to the 128-lane width by the caller; correctness does not depend
-on it.
+The kernels are validated against ``ref.stream_collide_ref`` in interpret
+mode (this container is CPU-only); on TPU the same ``pallas_call`` lowers
+with the block resident in VMEM. Whether to interpret is resolved once at
+program-build time from the active JAX backend (see :func:`resolve_interpret`).
+For best TPU layout the innermost (Z) extent should be padded to the
+128-lane width by the caller; correctness does not depend on it.
 """
 
 from __future__ import annotations
@@ -35,13 +40,53 @@ from jax.experimental import pallas as pl
 from ...lbm.lattice import D3Q19, Lattice
 from .ref import CT_FLUID, CT_LID
 
-__all__ = ["lbm_stream_collide_pallas"]
+__all__ = [
+    "lbm_stream_collide_pallas",
+    "lbm_stream_collide_halo_pallas",
+    "resolve_interpret",
+    "resolve_donate",
+]
 
 
-def _kernel(
-    f_ref,
-    mask_ref,
-    out_ref,
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Resolve the Pallas ``interpret`` flag once, at program-build time.
+
+    ``None`` (the default everywhere) means "interpret exactly when the
+    active JAX backend is CPU": on a real TPU/GPU the kernel lowers natively,
+    on this CPU-only container it runs the interpreter. Passing an explicit
+    bool overrides the backend probe (e.g. forcing interpret mode on an
+    accelerator to debug a lowering issue). Callers resolve *before* closing
+    the flag into a jitted program so the decision is taken exactly once per
+    program build, not per trace."""
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return bool(interpret)
+
+
+def resolve_donate(donate: bool | None = None) -> bool:
+    """Resolve the superstep buffer-donation flag once, at program-build time.
+
+    ``None`` (the default everywhere) means "donate exactly when the active
+    JAX backend is *not* CPU". On an accelerator the compiled substep
+    programs are memory-bound and donating the double-buffered pdf tuple
+    (``donate_argnums``) lets XLA ping-pong them in place, halving the HBM
+    footprint and eliminating the output allocation per substep. On XLA:CPU,
+    however, input/output aliasing feeds into LLVM's codegen (vectorization
+    and FMA contraction decisions change with the buffer assignment) and the
+    compiled stencil can differ from the undonated one by one ulp — measured
+    and deterministic, but enough to break the repo's bitwise conformance
+    contract between the fused modes and the host ``restack`` reference
+    (``--xla_cpu_enable_fast_math=false`` does not remove it). So the CPU
+    default keeps the value-identical path; an explicit bool overrides the
+    probe in either direction (the donation tests force ``True``)."""
+    if donate is None:
+        return jax.default_backend() != "cpu"
+    return bool(donate)
+
+
+def _stream_collide_body(
+    f,
+    mask,
     *,
     lattice: Lattice,
     omega: float,
@@ -49,8 +94,7 @@ def _kernel(
     collision: str,
     magic: float,
 ):
-    f = f_ref[0]  # (Q, X, Y, Z) resident in VMEM
-    mask = mask_ref[0]  # (X, Y, Z)
+    """Shared stream+collide body on one VMEM-resident (Q, X, Y, Z) block."""
     dtype = f.dtype
     Q = lattice.Q
     c = np.asarray(lattice.c)
@@ -122,8 +166,47 @@ def _kernel(
         raise ValueError(f"unknown collision model {collision!r}")
 
     fluid = (mask == CT_FLUID).astype(dtype)
-    result = jnp.stack([f_out[q] * fluid + f[q] * (1 - fluid) for q in range(Q)])
-    out_ref[0] = result
+    return jnp.stack([f_out[q] * fluid + f[q] * (1 - fluid) for q in range(Q)])
+
+
+def _kernel(f_ref, mask_ref, out_ref, **cfg):
+    f = f_ref[0]  # (Q, X, Y, Z) resident in VMEM
+    mask = mask_ref[0]  # (X, Y, Z)
+    out_ref[0] = _stream_collide_body(f, mask, **cfg)
+
+
+def _halo_kernel(f_ref, mask_ref, hv_ref, hc_ref, hm_ref, out_ref, **cfg):
+    """Halo-aware variant: scatter the block's exchanged ghost values into
+    the VMEM tile, then stream+collide — the ghost gather is fused into the
+    stencil read instead of being materialized as a full exchanged buffer.
+
+    ``hv`` is the per-block padded (P, Q) ghost-value slab, ``hc`` the (P,)
+    flat cell ids in the ghosted box, ``hm`` the (P,) validity mask. Padding
+    rows all point at one interior cell that is never a halo target and
+    write back its current value, so the scatter has no conflicting
+    duplicate targets and padded entries are exact no-ops — the fill is
+    deterministic and bitwise equal to the unpadded jnp scatter."""
+    f = f_ref[0]
+    mask = mask_ref[0]
+    hv = hv_ref[0]  # (P, Q)
+    hc = hc_ref[0]  # (P,)
+    hm = hm_ref[0]  # (P,)
+    Q = f.shape[0]
+    flat = f.reshape(Q, -1)
+    cur = flat[:, hc]  # (Q, P)
+    new = jnp.where(hm[None, :], hv.T, cur)
+    f = flat.at[:, hc].set(new).reshape(f.shape)
+    out_ref[0] = _stream_collide_body(f, mask, **cfg)
+
+
+def _cfg(omega, lattice, u_wall, collision, magic):
+    return dict(
+        lattice=lattice,
+        omega=float(omega),
+        u_wall=tuple(float(v) for v in u_wall),
+        collision=collision,
+        magic=float(magic),
+    )
 
 
 def lbm_stream_collide_pallas(
@@ -135,26 +218,20 @@ def lbm_stream_collide_pallas(
     u_wall: tuple[float, float, float] = (0.0, 0.0, 0.0),
     collision: str = "bgk",
     magic: float = 3.0 / 16.0,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Fused stream+collide over a stack of blocks.
 
     Args:
       f:    (B, Q, X, Y, Z) post-collision PDFs (ghost layer included).
       mask: (B, X, Y, Z) int32 cell types (0 fluid / 1 wall / 2 lid).
+      interpret: None (default) resolves per :func:`resolve_interpret`.
     Returns:
       (B, Q, X, Y, Z) updated PDFs.
     """
     B, Q, X, Y, Z = f.shape
     assert mask.shape == (B, X, Y, Z), (f.shape, mask.shape)
-    kern = functools.partial(
-        _kernel,
-        lattice=lattice,
-        omega=float(omega),
-        u_wall=tuple(float(v) for v in u_wall),
-        collision=collision,
-        magic=float(magic),
-    )
+    kern = functools.partial(_kernel, **_cfg(omega, lattice, u_wall, collision, magic))
     return pl.pallas_call(
         kern,
         grid=(B,),
@@ -164,5 +241,63 @@ def lbm_stream_collide_pallas(
         ],
         out_specs=pl.BlockSpec((1, Q, X, Y, Z), lambda b: (b, 0, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct(f.shape, f.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(f, mask)
+
+
+def lbm_stream_collide_halo_pallas(
+    f: jax.Array,
+    mask: jax.Array,
+    halo_vals: jax.Array,
+    halo_cell: jax.Array,
+    halo_valid: jax.Array,
+    *,
+    omega: float,
+    lattice: Lattice = D3Q19,
+    u_wall: tuple[float, float, float] = (0.0, 0.0, 0.0),
+    collision: str = "bgk",
+    magic: float = 3.0 / 16.0,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Halo-aware fused ghost-fill + stream+collide over a stack of blocks.
+
+    The kernel's tile effectively grows to cover the ghost ring: each grid
+    step receives, alongside its (Q, X, Y, Z) block, a compact padded slab of
+    the exchanged ghost values for that block and writes them into the tile
+    before the stencil reads — no intermediate exchanged buffer exists
+    between the gather and the stencil.
+
+    Args:
+      f:          (B, Q, X, Y, Z) post-collision PDFs (ghost layer included).
+      mask:       (B, X, Y, Z) int32 cell types.
+      halo_vals:  (B, P, Q) padded per-block ghost values (P = max fills per
+                  block; rows beyond a block's count are padding).
+      halo_cell:  (B, P) int32 flat cell ids into the ghosted (X, Y, Z) box;
+                  padding rows point at a never-targeted interior cell.
+      halo_valid: (B, P) bool; False rows are written back unchanged.
+      interpret:  None (default) resolves per :func:`resolve_interpret`.
+    Returns:
+      (B, Q, X, Y, Z) updated PDFs.
+    """
+    B, Q, X, Y, Z = f.shape
+    P = halo_cell.shape[1]
+    assert mask.shape == (B, X, Y, Z), (f.shape, mask.shape)
+    assert halo_vals.shape == (B, P, Q), (halo_vals.shape, (B, P, Q))
+    assert halo_valid.shape == (B, P), (halo_valid.shape, (B, P))
+    kern = functools.partial(
+        _halo_kernel, **_cfg(omega, lattice, u_wall, collision, magic)
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Q, X, Y, Z), lambda b: (b, 0, 0, 0, 0)),
+            pl.BlockSpec((1, X, Y, Z), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, P, Q), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, P), lambda b: (b, 0)),
+            pl.BlockSpec((1, P), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, X, Y, Z), lambda b: (b, 0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(f.shape, f.dtype),
+        interpret=resolve_interpret(interpret),
+    )(f, mask, halo_vals, halo_cell, halo_valid)

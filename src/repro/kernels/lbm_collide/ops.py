@@ -3,7 +3,17 @@
 Dispatches between the Pallas kernel (TPU target; interpret mode on CPU) and
 the pure-jnp reference (oracle / fallback). All simulation-constant
 parameters (lattice, omega, wall velocity, collision model) are closed over
-so the jitted step takes only the block stack and the mask.
+so the jitted step takes only the block stack and the mask. Whether the
+Pallas path interprets is resolved once at program-build time from the
+active JAX backend (:func:`~.lbm_collide.resolve_interpret`).
+
+The compiled superstep paths here implement the halo-in-tile data plane:
+ghost exchange is merged into one fill per destination level
+(:func:`~repro.lbm.halo.lower_halo_fill`) and fused into the same program
+as the stencil (:func:`make_halo_stream_collide`), the double-buffered pdf
+tuples are donated (``donate_argnums``) so each substep ping-pongs in
+place, and the rank-sharded absorb can split into interior/boundary
+programs so cross-rank payload routing overlaps interior stepping.
 """
 
 from __future__ import annotations
@@ -14,19 +24,35 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...lbm.halo import lower_halo_fill
 from ...lbm.lattice import D3Q19, Lattice
-from .lbm_collide import lbm_stream_collide_pallas
-from .ref import stream_collide_coeffs, stream_collide_ref
+from .lbm_collide import (
+    lbm_stream_collide_halo_pallas,
+    lbm_stream_collide_pallas,
+    resolve_donate,
+    resolve_interpret,
+)
+from .ref import (
+    collision_coeffs,
+    precompute_stream_masks,
+    stream_collide_coeffs,
+    stream_collide_ref,
+)
 
 __all__ = [
     "fused_stream_collide",
     "make_stream_collide",
     "make_arena_stream_collide",
+    "make_halo_stream_collide",
     "apply_compiled_ghost_plan",
     "make_fused_superstep",
     "make_ensemble_superstep",
     "make_rank_emit",
     "make_rank_absorb",
+    "make_rank_absorb_split",
+    "boundary_slot_sets",
+    "resolve_interpret",
+    "resolve_donate",
 ]
 
 
@@ -37,11 +63,17 @@ def make_stream_collide(
     u_wall: tuple[float, float, float] = (0.0, 0.0, 0.0),
     collision: str = "bgk",
     backend: str = "pallas",  # "pallas" | "ref"
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
-    """Build a jitted ``step(f_blocks, mask_blocks) -> f_blocks`` function."""
+    """Build a jitted ``step(f_blocks, mask_blocks) -> f_blocks`` function.
+
+    ``interpret=None`` (the default) resolves to "interpret iff the active
+    backend is CPU", once, here at build time — the flag is then baked into
+    the program, so a process that starts on TPU lowers the kernel natively
+    without every call site having to thread the decision through."""
 
     if backend == "pallas":
+        interpret = resolve_interpret(interpret)
 
         @jax.jit
         def step(f: jax.Array, mask: jax.Array) -> jax.Array:
@@ -81,7 +113,7 @@ def make_arena_stream_collide(
     u_wall: tuple[float, float, float] = (0.0, 0.0, 0.0),
     collision: str = "bgk",
     backend: str = "pallas",
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Arena entry point: an in-place ``step(f_buf, mask) -> None`` over a
     persistent :class:`~repro.core.fields.LevelArena` buffer.
@@ -107,6 +139,141 @@ def make_arena_stream_collide(
         np.copyto(f_buf, np.asarray(out))
 
     return step_arena
+
+
+# -- halo-in-tile stepping -------------------------------------------------------
+
+
+def _pad_fill_layout(
+    dst_slot: np.ndarray, dst_cell: np.ndarray, nblocks: int, dims: tuple[int, int, int]
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Repack a flat merged fill into the per-block padded slab layout the
+    halo-aware Pallas kernel consumes.
+
+    Returns ``(entry, cell, valid)``, each ``(nblocks, P)`` with ``P`` the
+    max fills per block: ``entry[b, j]`` indexes the fill's concatenated
+    value rows, ``cell[b, j]`` the flat ghosted-box cell to write. Padding
+    rows point at the box's center cell — an interior cell that is never a
+    halo target (all targets lie in the ghost ring) — with ``valid`` False,
+    so the kernel writes that cell's current value back: a deterministic
+    no-op even under duplicate-index scatter."""
+    n = int(dst_cell.size)
+    pad_cell = (dims[0] // 2 * dims[1] + dims[1] // 2) * dims[2] + dims[2] // 2
+    assert not np.any(dst_cell == pad_cell), "halo fill targeted the pad cell"
+    counts = np.bincount(dst_slot, minlength=nblocks)
+    assert counts.size == nblocks, (counts.size, nblocks)
+    P = int(counts.max()) if n else 0
+    entry = np.zeros((nblocks, P), dtype=np.int32)
+    cell = np.full((nblocks, P), pad_cell, dtype=np.int32)
+    valid = np.zeros((nblocks, P), dtype=bool)
+    order = np.argsort(dst_slot, kind="stable")
+    pos = 0
+    for b in range(nblocks):
+        k = int(counts[b])
+        idx = order[pos : pos + k]
+        pos += k
+        entry[b, :k] = idx
+        cell[b, :k] = dst_cell[idx]
+        valid[b, :k] = True
+    return entry, cell, valid
+
+
+def make_halo_stream_collide(
+    dst_slot: np.ndarray,
+    dst_cell: np.ndarray,
+    *,
+    mask: np.ndarray,
+    omega: float,
+    lattice: Lattice = D3Q19,
+    u_wall: tuple[float, float, float] = (0.0, 0.0, 0.0),
+    collision: str = "bgk",
+    magic: float = 3.0 / 16.0,
+    backend: str = "pallas",
+    interpret: bool | None = None,
+):
+    """Build a halo-aware ``step(f, vals) -> f`` for one level's block stack:
+    the ghost fill targeting (``dst_slot``, ``dst_cell``) and the
+    stream+collide stencil run as one fused unit instead of materializing an
+    exchanged buffer between them.
+
+    ``vals`` is the ``(N, Q)`` concatenated fill values (gathered by the
+    enclosing superstep from pre-step buffers, in the merged fill's segment
+    order). On the ``pallas`` backend the fill happens *inside* the kernel:
+    each grid step scatters its block's padded value slab into the
+    VMEM-resident tile before the stencil reads. On the ``ref`` backend the
+    fill is a single merged jnp scatter feeding the stencil in the same
+    program — and the mask being a build-time constant here lets the
+    streaming selectors be precomputed on the host
+    (:func:`~.ref.precompute_stream_masks`), dropping the per-substep mask
+    rolls entirely. Both paths are bitwise equal to scatter-then-step.
+
+    ``mask`` is the level's host ``(B, X, Y, Z)`` cell-type stack, closed
+    over as a constant (programs are rebuilt on mask refresh / AMR events).
+    """
+    mask = np.asarray(mask)
+    nblocks = mask.shape[0]
+    dims = mask.shape[1:]
+    assert dst_cell.size > 0, "use make_stream_collide when there is no fill"
+    db = jnp.asarray(dst_slot)
+    dc = jnp.asarray(dst_cell)
+
+    if backend == "pallas":
+        interpret = resolve_interpret(interpret)
+        entry, cell, valid = _pad_fill_layout(dst_slot, dst_cell, nblocks, dims)
+        entry_j = jnp.asarray(entry)
+        cell_j = jnp.asarray(cell)
+        valid_j = jnp.asarray(valid)
+        mask_j = jnp.asarray(mask)
+
+        def step(f: jax.Array, vals: jax.Array) -> jax.Array:
+            hv = vals[entry_j]  # (B, P, Q) padded per-block slabs
+            return lbm_stream_collide_halo_pallas(
+                f,
+                mask_j,
+                hv,
+                cell_j,
+                valid_j,
+                omega=omega,
+                lattice=lattice,
+                u_wall=u_wall,
+                collision=collision,
+                magic=magic,
+                interpret=interpret,
+            )
+
+    elif backend == "ref":
+        pm = precompute_stream_masks(mask, lattice)
+        fs = jnp.asarray(pm["fluid_src"])  # (Q, B, X, Y, Z)
+        ls = jnp.asarray(pm["lid_src"])
+        fl = jnp.asarray(pm["fluid"])  # (B, X, Y, Z)
+
+        def step(f: jax.Array, vals: jax.Array) -> jax.Array:
+            f = _flat3(f).at[db, :, dc].set(vals).reshape(f.shape)
+            coeffs = collision_coeffs(
+                omega,
+                lattice=lattice,
+                u_wall=u_wall,
+                collision=collision,
+                magic=magic,
+                dtype=f.dtype.type,
+            )
+
+            def blk(fb, fsb, lsb, flb):
+                return stream_collide_coeffs(
+                    fb,
+                    None,
+                    coeffs,
+                    lattice=lattice,
+                    collision=collision,
+                    premask={"fluid_src": fsb, "lid_src": lsb, "fluid": flb},
+                )
+
+            return jax.vmap(blk, in_axes=(0, 1, 1, 0))(f, fs, ls, fl)
+
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    return step
 
 
 def _device_plan_ops(plan, level_index: dict[int, int]) -> list[tuple]:
@@ -158,6 +325,27 @@ def _run_plan_ops(ops: list[tuple], bufs: list[jax.Array]) -> list[jax.Array]:
     return bufs
 
 
+def _lower_fill_gathers(fill, level_index: dict[int, int]) -> tuple:
+    """Device-ready gather specs for a merged fill's value segments."""
+    return tuple(
+        (
+            level_index[seg.src_level],
+            seg.kind,
+            jnp.asarray(seg.src_slot),
+            jnp.asarray(seg.src_cell),
+        )
+        for seg in fill.segments
+    )
+
+
+def _concat_vals(bufs, gathers, extra=()) -> jax.Array:
+    """Concatenate gathered segment values (plus any pre-built extra value
+    arrays, e.g. inbound message slices) in merged-fill order."""
+    parts = [_gather_vals(bufs[si], kind, sb, sc) for si, kind, sb, sc in gathers]
+    parts += list(extra)
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
 def apply_compiled_ghost_plan(plan, bufs: dict[int, jax.Array]) -> dict[int, jax.Array]:
     """Run one compiled single-field ghost exchange on per-level buffers.
 
@@ -185,6 +373,8 @@ def make_fused_superstep(
     steppers,
     masks,
     unroll_limit: int = 32,
+    donate: bool | None = None,
+    halo_stepper_factory=None,
 ):
     """Compile one full coarse step — the whole ``2^lmax`` substep cycle with
     interleaved ghost exchange — into a single jitted device program.
@@ -192,16 +382,30 @@ def make_fused_superstep(
     Per substep ``s`` the active level set is ``{l : s % 2^(lmax-l) == 0}``,
     which depends only on the number of trailing zeros of ``s``; there are
     therefore just ``lmax+1`` distinct *activity patterns*. Each pattern
-    becomes one branch (ghost exchange for the active set lowered from its
-    :class:`~repro.lbm.halo.CompiledGhostPlan`, then stream+collide on the
-    active levels, finest first). Short cycles (``nsub <= unroll_limit``,
-    i.e. essentially always) are unrolled straight-line — on CPU the
-    ``fori_loop`` carry and ``switch`` result copies cost more than the whole
-    substep — while deeper hierarchies run the loop as ``lax.fori_loop``
-    dispatching through ``lax.switch`` on the pattern of ``s`` to bound
-    program size. Nothing touches the host either way: the only transfers
-    are the caller's initial upload and whatever diagnostics later flush
-    back.
+    becomes one branch. With ``halo_stepper_factory`` set the branch runs the
+    halo-in-tile schedule: every active level's ghost fill is merged into one
+    scatter (:func:`~repro.lbm.halo.lower_halo_fill`), all fill values are
+    gathered up front from the pre-step buffers (sources are interior cells,
+    disjoint from every fill target, so this is bitwise equal to the
+    sequential per-op schedule), and each level then steps through its fused
+    fill+stencil program — no intermediate exchanged buffer is materialized.
+    Without the factory the legacy per-op gather/scatter schedule runs.
+    Short cycles (``nsub <= unroll_limit``, i.e. essentially always) are
+    unrolled straight-line — on CPU the ``fori_loop`` carry and ``switch``
+    result copies cost more than the whole substep — while deeper
+    hierarchies run the loop as ``lax.fori_loop`` dispatching through
+    ``lax.switch`` on the pattern of ``s`` to bound program size. Nothing
+    touches the host either way: the only transfers are the caller's initial
+    upload and whatever diagnostics later flush back.
+
+    ``donate`` resolves through :func:`~.lbm_collide.resolve_donate`
+    (default: donate exactly when the backend is not CPU — XLA:CPU codegen
+    under aliasing perturbs the stencil by one ulp, which would break the
+    bitwise conformance contract). When donation is on, XLA aliases the
+    inputs into the outputs and the superstep ping-pongs the double-buffered
+    populations in place — callers must treat the passed-in arrays as
+    consumed (the engines re-``store`` the returned arrays into their
+    residency immediately).
 
     Args:
         levels: refinement levels in use (the buffer tuple's order is the
@@ -209,8 +413,12 @@ def make_fused_superstep(
         plans: pattern index ``p`` (0..lmax) -> compiled ghost plan for the
             active set ``{l : l >= lmax - p}``.
         steppers: level -> ``step(f, mask) -> f`` (from
-            :func:`make_stream_collide`; closed over, traced inline).
+            :func:`make_stream_collide`; closed over, traced inline). Used
+            for active levels with no fill, and for every level in the
+            legacy schedule.
         masks: level -> device mask stack for that level's buffer.
+        halo_stepper_factory: optional ``(level, dst_slot, dst_cell) ->
+            step(f, vals)`` builder (see :func:`make_halo_stream_collide`).
 
     Returns:
         A jitted ``superstep(pdfs: tuple) -> tuple`` advancing one coarse
@@ -223,14 +431,38 @@ def make_fused_superstep(
     masks_t = tuple(jnp.asarray(masks[l]) for l in levels)
 
     def make_branch(p: int):
-        active = tuple(l for l in levels if l >= lmax - p)
-        ops = _device_plan_ops(plans[p], index)
+        active = tuple(sorted((l for l in levels if l >= lmax - p), reverse=True))
+        if halo_stepper_factory is None:
+            ops = _device_plan_ops(plans[p], index)
+
+            def branch(pdfs):
+                bufs = _run_plan_ops(ops, list(pdfs))
+                for l in active:  # finest first, as the host driver orders
+                    i = index[l]  # its per-level kernel calls
+                    bufs[i] = steppers[l](bufs[i], masks_t[i])
+                return tuple(bufs)
+
+            return branch
+
+        fills = lower_halo_fill(plans[p])
+        assert set(fills) <= set(active), (sorted(fills), active)
+        gathers = {l: _lower_fill_gathers(f, index) for l, f in fills.items()}
+        hsteps = {
+            l: halo_stepper_factory(l, f.dst_slot, f.dst_cell)
+            for l, f in fills.items()
+        }
 
         def branch(pdfs):
-            bufs = _run_plan_ops(ops, list(pdfs))
-            for l in sorted(active, reverse=True):  # finest first, as the
-                i = index[l]  # host driver orders its per-level kernel calls
-                bufs[i] = steppers[l](bufs[i], masks_t[i])
+            bufs = list(pdfs)
+            # all fill values gather from the pre-step buffers (every source
+            # is an interior cell; every target a ghost cell — disjoint)
+            vals = {l: _concat_vals(bufs, gathers[l]) for l in fills}
+            for l in active:  # finest first
+                i = index[l]
+                if l in fills:
+                    bufs[i] = hsteps[l](bufs[i], vals[l])
+                else:
+                    bufs[i] = steppers[l](bufs[i], masks_t[i])
             return tuple(bufs)
 
         return branch
@@ -241,7 +473,6 @@ def make_fused_superstep(
         lmax if s == 0 else min((s & -s).bit_length() - 1, lmax) for s in range(nsub)
     ]
 
-    @jax.jit
     def superstep(pdfs):
         pdfs = tuple(pdfs)
         if nsub <= unroll_limit:
@@ -255,7 +486,9 @@ def make_fused_superstep(
 
         return jax.lax.fori_loop(0, nsub, body, pdfs)
 
-    return superstep
+    if resolve_donate(donate):
+        return jax.jit(superstep, donate_argnums=0)
+    return jax.jit(superstep)
 
 
 def make_ensemble_superstep(
@@ -279,7 +512,8 @@ def make_ensemble_superstep(
     dtype on the host (:func:`~repro.kernels.lbm_collide.ref.collision_coeffs`)
     and only ever combine as ``coefficient * array``, each member's slice of
     the batched program is bitwise-identical to a solo fused run with the
-    same parameters.
+    same parameters on every interior cell (dead post-step ghost values may
+    round differently under the member ``vmap`` on XLA:CPU).
 
     Args:
         levels: refinement levels in use (ascending buffer-tuple order).
@@ -302,6 +536,22 @@ def make_ensemble_superstep(
     lmax = levels[-1]
     nsub = 1 << lmax
     masks_t = tuple(jnp.asarray(masks[l]) for l in levels)
+    # host-precomputed streaming selectors, mirroring the solo fused path's
+    # merged-fill steppers (make_halo_stream_collide, backend="ref"): the
+    # batched program must trace the *same op structure* as a solo fused run
+    # or XLA:CPU's context-dependent rounding breaks the per-member bitwise
+    # contract (a structurally different batch drifts by one ulp)
+    premasks = {
+        l: precompute_stream_masks(np.asarray(masks[l]), lattice) for l in levels
+    }
+    pm_t = {
+        l: (
+            jnp.asarray(pm["fluid_src"]),  # (Q, B, X, Y, Z)
+            jnp.asarray(pm["lid_src"]),
+            jnp.asarray(pm["fluid"]),  # (B, X, Y, Z)
+        )
+        for l, pm in premasks.items()
+    }
 
     def step_level(fb: jax.Array, mb: jax.Array, coeffs: dict) -> jax.Array:
         return jax.vmap(
@@ -310,16 +560,51 @@ def make_ensemble_superstep(
             )
         )(fb, mb)
 
+    def step_level_filled(
+        fb: jax.Array, l: int, db, dc, vals: jax.Array, coeffs: dict
+    ) -> jax.Array:
+        # merged fill scatter + premask stencil, same shape as the solo
+        # halo stepper (vmap over blocks, selectors batched along axis 1)
+        fb = _flat3(fb).at[db, :, dc].set(vals).reshape(fb.shape)
+        fs, ls, fl = pm_t[l]
+
+        def blk(f, fsb, lsb, flb):
+            return stream_collide_coeffs(
+                f,
+                None,
+                coeffs,
+                lattice=lattice,
+                collision=collision,
+                premask={"fluid_src": fsb, "lid_src": lsb, "fluid": flb},
+            )
+
+        return jax.vmap(blk, in_axes=(0, 1, 1, 0))(fb, fs, ls, fl)
+
     def make_branch(p: int):
-        active = tuple(l for l in levels if l >= lmax - p)
-        ops = _device_plan_ops(plans[p], index)
+        active = tuple(sorted((l for l in levels if l >= lmax - p), reverse=True))
+        fills = lower_halo_fill(plans[p])
+        assert set(fills) <= set(active), (sorted(fills), active)
+        gathers = {l: _lower_fill_gathers(f, index) for l, f in fills.items()}
+        scatters = {
+            l: (jnp.asarray(f.dst_slot), jnp.asarray(f.dst_cell))
+            for l, f in fills.items()
+        }
 
         def branch(carry):
             pdfs, coeffs = carry
-            bufs = _run_plan_ops(ops, list(pdfs))
-            for l in sorted(active, reverse=True):  # finest first, matching
-                i = index[l]  # the solo fused superstep's kernel order
-                bufs[i] = step_level(bufs[i], masks_t[i], coeffs[l])
+            bufs = list(pdfs)
+            # all fill values gather from the pre-step buffers, exactly as
+            # the solo fused superstep's halo-in-tile branch does
+            vals = {l: _concat_vals(bufs, gathers[l]) for l in fills}
+            for l in active:  # finest first, matching the solo kernel order
+                i = index[l]
+                if l in fills:
+                    db, dc = scatters[l]
+                    bufs[i] = step_level_filled(
+                        bufs[i], l, db, dc, vals[l], coeffs[l]
+                    )
+                else:
+                    bufs[i] = step_level(bufs[i], masks_t[i], coeffs[l])
             return tuple(bufs), coeffs
 
         return branch
@@ -355,6 +640,11 @@ def make_rank_emit(messages, level_index: dict[int, int]):
     payload per message (sender-side resampled, segments concatenated in the
     spec's canonical order) — the arrays handed to the ``Comm`` fabric, so
     nothing touches the host. Returns ``None`` when the rank sends nothing.
+
+    ``emit`` deliberately never donates its inputs: it only *reads* the pdf
+    buffers, and they must stay live for the interior/absorb programs
+    dispatched after it in the same substep. The donation happens there —
+    the runtime sequences the donated write after emit's pending reads.
     """
     if not messages:
         return None
@@ -377,6 +667,17 @@ def make_rank_emit(messages, level_index: dict[int, int]):
     return emit
 
 
+def boundary_slot_sets(messages, masks) -> dict[int, frozenset[int]]:
+    """Per-level sets of block slots whose ghost layer depends on inbound
+    cross-rank messages (the *boundary* blocks of a rank). ``masks`` maps
+    the rank's levels to their (B, ...) stacks (only shapes are read)."""
+    bnd: dict[int, set[int]] = {l: set() for l in masks}
+    for m in messages:
+        for dl, db, _dc, _n in m.scatter:
+            bnd.setdefault(dl, set()).update(int(s) for s in np.unique(db))
+    return {l: frozenset(s) for l, s in bnd.items()}
+
+
 def make_rank_absorb(
     messages,
     local_plan,
@@ -384,6 +685,9 @@ def make_rank_absorb(
     steppers,
     masks,
     active_levels,
+    *,
+    donate: bool | None = None,
+    halo_stepper_factory=None,
 ):
     """Compile one rank's receive+exchange+step side of a sharded substep.
 
@@ -395,11 +699,161 @@ def make_rank_absorb(
     kernels and device mask stacks; ``active_levels`` is this substep
     pattern's active set intersected with the rank's levels.
 
-    Returns a jitted ``absorb(pdfs: tuple, msgs: tuple) -> tuple`` that
-    scatters inbound payload segments into ghost cells, runs the intra-rank
-    exchange, then stream+collides the active levels finest-first — one
+    With ``halo_stepper_factory`` set, the local-plan fills and the inbound
+    message scatters targeting each level are merged into *one* fill per
+    level and fused into that level's stencil program (halo-in-tile) — local
+    fill values gather from the pre-step buffers, message values are sliced
+    straight from the payload operands. ``donate`` resolves through
+    :func:`~.lbm_collide.resolve_donate`; when on, the pdf tuple is donated
+    so the substep runs ping-pong in place (payload operands are never
+    donated — the fabric may still hold them).
+
+    Returns a jitted ``absorb(pdfs: tuple, msgs: tuple) -> tuple`` — one
     device program per (rank, activity pattern), no host contact.
     """
+    order = tuple(sorted(active_levels, reverse=True))  # finest first, as the
+    masks_t = {l: jnp.asarray(masks[l]) for l in order}  # host driver does
+
+    if halo_stepper_factory is None:
+        scatters = tuple(
+            tuple(
+                (level_index[dst_level], jnp.asarray(db), jnp.asarray(dc), n)
+                for dst_level, db, dc, n in m.scatter
+            )
+            for m in messages
+        )
+        local_ops = _device_plan_ops(local_plan, level_index) if local_plan else []
+
+        def absorb(pdfs, msgs):
+            bufs = list(pdfs)
+            for segs, msg in zip(scatters, msgs):
+                off = 0
+                for li, db, dc, n in segs:
+                    d = bufs[li]
+                    bufs[li] = (
+                        _flat3(d).at[db, :, dc].set(msg[off : off + n]).reshape(d.shape)
+                    )
+                    off += n
+            bufs = _run_plan_ops(local_ops, bufs)
+            for l in order:
+                i = level_index[l]
+                bufs[i] = steppers[l](bufs[i], masks_t[l])
+            return tuple(bufs)
+
+    else:
+        fills = (
+            lower_halo_fill(local_plan)
+            if local_plan is not None and local_plan.ops
+            else {}
+        )
+        # level -> merged fill: local segments first, then message slices, in
+        # (message, scatter-segment) order — dst rows and value parts aligned
+        per: dict[int, dict] = {
+            l: {
+                "dst": [(f.dst_slot, f.dst_cell)],
+                "gath": _lower_fill_gathers(f, level_index),
+                "msg": [],
+            }
+            for l, f in fills.items()
+        }
+        for mi, m in enumerate(messages):
+            off = 0
+            for dl, db, dc, n in m.scatter:
+                e = per.setdefault(dl, {"dst": [], "gath": (), "msg": []})
+                e["dst"].append((db, dc))
+                e["msg"].append((mi, off, n))
+                off += n
+        assert set(per) <= set(order), (sorted(per), order)
+        hsteps = {
+            l: halo_stepper_factory(
+                l,
+                np.concatenate([d[0] for d in e["dst"]]),
+                np.concatenate([d[1] for d in e["dst"]]),
+            )
+            for l, e in per.items()
+        }
+
+        def absorb(pdfs, msgs):
+            bufs = list(pdfs)
+            vals = {
+                l: _concat_vals(
+                    bufs,
+                    e["gath"],
+                    extra=[msgs[mi][off : off + n] for mi, off, n in e["msg"]],
+                )
+                for l, e in per.items()
+            }
+            for l in order:
+                i = level_index[l]
+                if l in vals:
+                    bufs[i] = hsteps[l](bufs[i], vals[l])
+                else:
+                    bufs[i] = steppers[l](bufs[i], masks_t[l])
+            return tuple(bufs)
+
+    if resolve_donate(donate):
+        return jax.jit(absorb, donate_argnums=0)
+    return jax.jit(absorb)
+
+
+def make_rank_absorb_split(
+    messages,
+    local_plan,
+    level_index: dict[int, int],
+    steppers,
+    masks,
+    active_levels,
+    *,
+    donate: bool | None = None,
+):
+    """Split one rank's substep into an interior and a boundary program so
+    cross-rank payload routing overlaps interior stepping.
+
+    *Boundary* blocks are the slots whose ghost layer depends on inbound
+    messages (:func:`boundary_slot_sets`); everything else is *interior* —
+    by construction an interior block's ghosts are filled entirely by the
+    rank-local plan. The interior program ``interior(pdfs) -> pdfs`` gathers
+    **all** local fill values from the pre-step buffers, scatters them
+    (including the boundary blocks' local-sourced ghosts — their gathers
+    happened before any stepping, preserving exchange semantics), then
+    steps only the interior slots of each active level. The boundary
+    program ``boundary(pdfs, msgs) -> pdfs`` scatters the inbound payloads
+    and steps the boundary slots. The advance loop dispatches every rank's
+    interior program *before* routing messages on the host, so the fabric
+    work hides behind interior compute; the two programs together are
+    bitwise equal to the unsplit absorb (per-block stepping is independent,
+    and every ghost fill lands before the slot that reads it steps).
+
+    Both programs donate their pdf tuple when ``donate`` (resolved through
+    :func:`~.lbm_collide.resolve_donate`) is on.
+    """
+    order = tuple(sorted(active_levels, reverse=True))
+    masks_np = {l: np.asarray(masks[l]) for l in order}
+    bnd = boundary_slot_sets(messages, masks_np)
+    idx_int = {
+        l: np.asarray(
+            [s for s in range(masks_np[l].shape[0]) if s not in bnd.get(l, ())],
+            dtype=np.int32,
+        )
+        for l in order
+    }
+    idx_bnd = {
+        l: np.asarray(sorted(bnd.get(l, ())), dtype=np.int32) for l in order
+    }
+    masks_t = {l: jnp.asarray(masks_np[l]) for l in order}
+    sub_mask = {
+        ("int", l): jnp.asarray(masks_np[l][idx_int[l]]) for l in order
+    }
+    sub_mask.update(
+        (("bnd", l), jnp.asarray(masks_np[l][idx_bnd[l]])) for l in order
+    )
+    fills = (
+        lower_halo_fill(local_plan) if local_plan is not None and local_plan.ops else {}
+    )
+    local_j = {
+        l: (jnp.asarray(f.dst_slot), jnp.asarray(f.dst_cell), _lower_fill_gathers(f, level_index))
+        for l, f in fills.items()
+    }
     scatters = tuple(
         tuple(
             (level_index[dst_level], jnp.asarray(db), jnp.asarray(dc), n)
@@ -407,26 +861,51 @@ def make_rank_absorb(
         )
         for m in messages
     )
-    local_ops = _device_plan_ops(local_plan, level_index) if local_plan else []
-    order = tuple(sorted(active_levels, reverse=True))  # finest first, as the
-    masks_t = {l: jnp.asarray(masks[l]) for l in order}  # host driver does
 
-    @jax.jit
-    def absorb(pdfs, msgs):
+    def _step_subset(bufs, l, idx, which):
+        i = level_index[l]
+        if idx.size == 0:
+            return
+        if idx.size == masks_np[l].shape[0]:
+            bufs[i] = steppers[l](bufs[i], masks_t[l])
+            return
+        sel = jnp.asarray(idx)
+        sub = steppers[l](bufs[i][sel], sub_mask[(which, l)])
+        bufs[i] = bufs[i].at[sel].set(sub)
+
+    def interior(pdfs):
+        bufs = list(pdfs)
+        # every local fill (interior *and* boundary targets) gathers and
+        # lands here, from pre-step sources
+        for l, (db, dc, gath) in local_j.items():
+            vals = _concat_vals(bufs, gath)
+            i = level_index[l]
+            d = bufs[i]
+            bufs[i] = _flat3(d).at[db, :, dc].set(vals).reshape(d.shape)
+        for l in order:
+            _step_subset(bufs, l, idx_int[l], "int")
+        return tuple(bufs)
+
+    def boundary(pdfs, msgs):
         bufs = list(pdfs)
         for segs, msg in zip(scatters, msgs):
             off = 0
             for li, db, dc, n in segs:
                 d = bufs[li]
-                bufs[li] = _flat3(d).at[db, :, dc].set(msg[off : off + n]).reshape(d.shape)
+                bufs[li] = (
+                    _flat3(d).at[db, :, dc].set(msg[off : off + n]).reshape(d.shape)
+                )
                 off += n
-        bufs = _run_plan_ops(local_ops, bufs)
         for l in order:
-            i = level_index[l]
-            bufs[i] = steppers[l](bufs[i], masks_t[l])
+            _step_subset(bufs, l, idx_bnd[l], "bnd")
         return tuple(bufs)
 
-    return absorb
+    if resolve_donate(donate):
+        return (
+            jax.jit(interior, donate_argnums=0),
+            jax.jit(boundary, donate_argnums=0),
+        )
+    return jax.jit(interior), jax.jit(boundary)
 
 
 def fused_stream_collide(
@@ -438,7 +917,7 @@ def fused_stream_collide(
     u_wall: tuple[float, float, float] = (0.0, 0.0, 0.0),
     collision: str = "bgk",
     backend: str = "pallas",
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """One fused stream+collide step over (B, Q, X, Y, Z) block stacks."""
     return make_stream_collide(

@@ -30,6 +30,7 @@ __all__ = [
     "stream_collide_ref",
     "stream_collide_coeffs",
     "collision_coeffs",
+    "precompute_stream_masks",
     "equilibrium",
     "moments",
     "CT_FLUID",
@@ -101,20 +102,53 @@ def collision_coeffs(
     raise ValueError(f"unknown collision model {collision!r}")
 
 
+def precompute_stream_masks(mask, lattice: Lattice = D3Q19) -> dict[str, np.ndarray]:
+    """Hoist the mask-derived streaming selectors out of the kernel.
+
+    The cell-type mask only changes at AMR events, yet the kernel re-rolls it
+    (and re-compares against the cell-type codes) for every direction, every
+    substep. For the compiled superstep paths — where the mask is a build-time
+    constant — this precomputes, on the host, exactly the booleans the kernel
+    derives: ``fluid_src[q]`` / ``lid_src[q]`` are the rolled-mask comparisons
+    for direction ``q``, ``fluid`` is the local-cell selector. Feeding them
+    through :func:`stream_collide_coeffs`'s ``premask`` argument produces
+    bitwise-identical results (identical booleans drive identical selects).
+
+    ``mask`` may be a single block ``(X, Y, Z)`` or a stack ``(B, X, Y, Z)``;
+    rolls act on the trailing three axes and the ``q`` axis leads:
+    ``fluid_src``/``lid_src`` are ``(Q, *mask.shape)`` bool.
+    """
+    m = np.asarray(mask)
+    Q = lattice.Q
+    c = np.asarray(lattice.c)
+    fluid_src = np.empty((Q,) + m.shape, dtype=bool)
+    lid_src = np.empty((Q,) + m.shape, dtype=bool)
+    for q in range(Q):
+        rolled = np.roll(
+            m, shift=(int(c[q, 0]), int(c[q, 1]), int(c[q, 2])), axis=(-3, -2, -1)
+        )
+        fluid_src[q] = rolled == CT_FLUID
+        lid_src[q] = rolled == CT_LID
+    return {"fluid_src": fluid_src, "lid_src": lid_src, "fluid": m == CT_FLUID}
+
+
 def stream_collide_coeffs(
     f: jnp.ndarray,
-    mask: jnp.ndarray,
+    mask: jnp.ndarray | None,
     coeffs: dict,
     *,
     lattice: Lattice = D3Q19,
     collision: str = "bgk",
+    premask: dict | None = None,
 ) -> jnp.ndarray:
     """One fused stream+collide step on a single block (Q, X, Y, Z).
 
     ``coeffs`` comes from :func:`collision_coeffs` and may hold either host
     scalars (closed over as constants — the classic path) or traced arrays
     (per-member physics parameters under ``vmap`` — the ensemble path); both
-    execute the identical op sequence.
+    execute the identical op sequence. When ``premask`` (from
+    :func:`precompute_stream_masks`) is given, the mask rolls/compares are
+    skipped in favor of the precomputed selectors and ``mask`` may be None.
     """
     dtype = f.dtype
     Q = lattice.Q
@@ -127,9 +161,17 @@ def stream_collide_coeffs(
     for q in range(Q):
         cq = c[q]
         pulled = jnp.roll(f[q], shift=(int(cq[0]), int(cq[1]), int(cq[2])), axis=(0, 1, 2))
-        src_mask = jnp.roll(mask, shift=(int(cq[0]), int(cq[1]), int(cq[2])), axis=(0, 1, 2))
-        bounced = f[opp[q]] + lid[q] * (src_mask == CT_LID).astype(dtype)
-        f_in.append(jnp.where(src_mask == CT_FLUID, pulled, bounced))
+        if premask is not None:
+            is_fluid_src = premask["fluid_src"][q]
+            is_lid_src = premask["lid_src"][q]
+        else:
+            src_mask = jnp.roll(
+                mask, shift=(int(cq[0]), int(cq[1]), int(cq[2])), axis=(0, 1, 2)
+            )
+            is_fluid_src = src_mask == CT_FLUID
+            is_lid_src = src_mask == CT_LID
+        bounced = f[opp[q]] + lid[q] * is_lid_src.astype(dtype)
+        f_in.append(jnp.where(is_fluid_src, pulled, bounced))
     f_in = jnp.stack(f_in)
 
     # -- collision -------------------------------------------------------------
@@ -150,7 +192,10 @@ def stream_collide_coeffs(
     else:
         raise ValueError(f"unknown collision model {collision!r}")
 
-    fluid = (mask == CT_FLUID)[None].astype(dtype)
+    if premask is not None:
+        fluid = jnp.asarray(premask["fluid"])[None].astype(dtype)
+    else:
+        fluid = (mask == CT_FLUID)[None].astype(dtype)
     return f_out * fluid + f * (1 - fluid)
 
 

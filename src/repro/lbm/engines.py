@@ -50,9 +50,12 @@ import numpy as np
 from ..core import LevelArena, RankArenas
 from ..core.pipeline import StageStats
 from ..kernels.lbm_collide.ops import (
+    boundary_slot_sets,
     make_arena_stream_collide,
     make_fused_superstep,
+    make_halo_stream_collide,
     make_rank_absorb,
+    make_rank_absorb_split,
     make_rank_emit,
     make_stream_collide,
 )
@@ -114,8 +117,23 @@ class StepEngine:
             u_wall=cfg.u_lid,
             collision=cfg.collision,
             backend=cfg.kernel_backend,
-            interpret=True,
+            # None resolves at program-build time: interpret iff the active
+            # backend is CPU (a real TPU/GPU lowers the kernel natively)
+            interpret=getattr(cfg, "kernel_interpret", None),
         )
+
+    def _halo_stepper_factory(self, masks_host: dict[int, np.ndarray]):
+        """``(level, dst_slot, dst_cell) -> step(f, vals)`` builder for the
+        halo-in-tile superstep paths; ``masks_host`` are host mask stacks
+        (copied — the factory's premask constants must not alias mutable
+        arena storage)."""
+
+        def factory(level: int, dst_slot: np.ndarray, dst_cell: np.ndarray):
+            return make_halo_stream_collide(
+                dst_slot, dst_cell, mask=masks_host[level], **self._stepper_kwargs(level)
+            )
+
+        return factory
 
     def _stepper(self, level: int) -> Callable:
         if level not in self._steppers:
@@ -330,11 +348,14 @@ class FusedEngine(ArenaEngine):
             for p in range(lmax + 1)
         }
         res = self.arena.device()
+        masks_host = {l: np.array(self.arena.buffer(l, "mask")) for l in levels}
         self._fused_fn = make_fused_superstep(
             levels=levels,
             plans=plans,
             steppers={l: self._fused_stepper(l) for l in levels},
             masks={l: res.fetch(l, "mask") for l in levels},
+            donate=getattr(self.cfg, "donate_pdfs", None),
+            halo_stepper_factory=self._halo_stepper_factory(masks_host),
         )
         self._fused_key = key
         return self._fused_fn, levels
@@ -343,7 +364,9 @@ class FusedEngine(ArenaEngine):
         """Run whole coarse steps on device: one program call each, zero host
         transfers in steady state (uploads only after AMR events / mask
         refreshes; downloads only when diagnostics or the control plane
-        materialize host views)."""
+        materialize host views). The superstep donates its pdf tuple, so
+        each call consumes the previous arrays (ping-pong in place) — the
+        fresh outputs are stored back into the residency immediately."""
         fn, levels = self._fused_program()
         res = self.arena.device()
         pdfs = tuple(res.fetch(l, "pdf") for l in levels)
@@ -462,6 +485,10 @@ class _RankPrograms:
     rank_levels: dict[int, tuple[int, ...]]
     emits: dict[int, dict[int, Callable]] = field(default_factory=dict)
     absorbs: dict[int, dict[int, Callable]] = field(default_factory=dict)
+    # interior/boundary split pair (exclusive with absorbs[p][r]): interior
+    # steps while the host routes payloads, boundary consumes the messages
+    interiors: dict[int, dict[int, Callable]] = field(default_factory=dict)
+    boundaries: dict[int, dict[int, Callable]] = field(default_factory=dict)
     sends: dict[int, dict[int, list]] = field(default_factory=dict)
     recvs: dict[int, dict[int, list]] = field(default_factory=dict)
     has_messages: dict[int, bool] = field(default_factory=dict)
@@ -530,6 +557,8 @@ class FusedShardedEngine(ShardedEngine):
             progs.has_messages[p] = bool(plan.messages)
             progs.emits[p] = {}
             progs.absorbs[p] = {}
+            progs.interiors[p] = {}
+            progs.boundaries[p] = {}
             progs.sends[p] = {}
             progs.recvs[p] = {}
             for r in ranks:
@@ -549,14 +578,52 @@ class FusedShardedEngine(ShardedEngine):
                     # coarse blocks and a fine-only substep is running):
                     # don't compile — and don't dispatch — an identity program
                     continue
-                progs.absorbs[p][r] = make_rank_absorb(
-                    recvs,
-                    local,
-                    idx,
-                    steppers={l: self._fused_stepper(l) for l in rank_levels[r]},
-                    masks={l: res.fetch(l, "mask") for l in rank_levels[r]},
-                    active_levels=rank_active,
+                steppers = {l: self._fused_stepper(l) for l in rank_levels[r]}
+                masks_dev = {l: res.fetch(l, "mask") for l in rank_levels[r]}
+                masks_host = {
+                    l: np.array(per_rank[r].buffer(l, "mask"))
+                    for l in rank_levels[r]
+                }
+                bnd = boundary_slot_sets(
+                    recvs, {l: masks_host[l] for l in rank_active}
                 )
+                n_interior = sum(
+                    masks_host[l].shape[0] - len(bnd.get(l, ()))
+                    for l in rank_active
+                )
+                # the split is an accelerator optimization: XLA:CPU compiles
+                # the sub-stack stencil with context-dependent rounding (one
+                # ulp off the unsplit program), so the CPU default keeps the
+                # bitwise-conformant unsplit absorb (override: overlap_split)
+                split = getattr(self.cfg, "overlap_split", None)
+                if split is None:
+                    split = jax.default_backend() != "cpu"
+                if split and recvs and n_interior > 0:
+                    # boundary blocks wait for inbound payloads; interior
+                    # blocks don't — split so the host-side message routing
+                    # overlaps the interior stepping dispatched before it
+                    progs.interiors[p][r], progs.boundaries[p][r] = (
+                        make_rank_absorb_split(
+                            recvs,
+                            local,
+                            idx,
+                            steppers=steppers,
+                            masks=masks_dev,
+                            active_levels=rank_active,
+                            donate=getattr(self.cfg, "donate_pdfs", None),
+                        )
+                    )
+                else:
+                    progs.absorbs[p][r] = make_rank_absorb(
+                        recvs,
+                        local,
+                        idx,
+                        steppers=steppers,
+                        masks=masks_dev,
+                        active_levels=rank_active,
+                        donate=getattr(self.cfg, "donate_pdfs", None),
+                        halo_stepper_factory=self._halo_stepper_factory(masks_host),
+                    )
         self._programs_cache = progs
         self._programs_key = key
         return progs
@@ -565,7 +632,17 @@ class FusedShardedEngine(ShardedEngine):
         """Run whole coarse steps with per-rank device programs: the only
         per-substep host involvement is routing device-resident message
         buffers through ``Comm`` (the fabric sees exactly the same p2p shape
-        as the host-sharded mode, with identical byte accounting)."""
+        as the host-sharded mode, with identical byte accounting).
+
+        Dispatch order per substep implements the latency-hiding split:
+        every rank's ``emit`` (payload build) and ``interior`` program is
+        dispatched *before* the host touches the fabric, so the Python-side
+        send/exchange/routing runs while the device is still chewing on
+        payload gathers and interior stepping (JAX dispatch is async); only
+        the ``boundary``/``absorb`` programs — which consume inbound
+        payloads — wait for routing. Emits read the pre-step buffers the
+        interior programs then consume by donation; the runtime sequences
+        the donated write after the pending reads."""
         progs = self._programs()
         comm = self.sim.comm
         res = {r: self.arenas.per_rank[r].device() for r in progs.ranks}
@@ -578,11 +655,17 @@ class FusedShardedEngine(ShardedEngine):
         for _ in range(coarse_steps):
             for s in range(progs.nsub):
                 p = progs.pattern[s]
+                payloads = []
                 for r in progs.ranks:
                     emit = progs.emits[p].get(r)
-                    if emit is None:
-                        continue
-                    for m, arr in zip(progs.sends[p][r], emit(pdfs[r])):
+                    if emit is not None:
+                        payloads.append((r, emit(pdfs[r])))
+                for r in progs.ranks:
+                    interior = progs.interiors[p].get(r)
+                    if interior is not None:
+                        pdfs[r] = interior(pdfs[r])
+                for r, arrs in payloads:
+                    for m, arr in zip(progs.sends[p][r], arrs):
                         comm.send(
                             m.src_rank, m.dst_rank, "halo", (m.key, arr),
                             nbytes=m.nbytes,
@@ -593,6 +676,11 @@ class FusedShardedEngine(ShardedEngine):
                         for _tag, (mkey, arr) in msgs:
                             by_key[mkey] = arr
                 for r in progs.ranks:
+                    boundary = progs.boundaries[p].get(r)
+                    if boundary is not None:
+                        msgs = tuple(by_key[m.key] for m in progs.recvs[p][r])
+                        pdfs[r] = boundary(pdfs[r], msgs)
+                        continue
                     absorb = progs.absorbs[p].get(r)
                     if absorb is None:  # rank is idle in this pattern
                         continue

@@ -313,3 +313,114 @@ def test_rank_arenas_partition_data_by_owner_across_amr():
     )
     for r in range(4):
         assert held[r] == len(sim.forest.local_blocks(r)) * per_block
+
+
+# -- pallas-backend legs -------------------------------------------------------
+# The pallas kernel computes moments with unrolled per-direction arithmetic
+# (the ref kernel uses einsum contractions), so pallas runs are NOT bitwise
+# against ref runs — the cross-backend tolerance lives in
+# tests/test_kernels_lbm.py. Within the backend the conformance contract is
+# the same as for ref: every fused mode matches a pallas *restack* reference
+# at 1e-10 (in practice bitwise) across an AMR event. Shorter schedule than
+# the ref legs — interpret mode is slow.
+
+PALLAS_STEPS = 4
+PALLAS_INTERVAL = 2  # AMR cycles after steps 2 and 4: spans >= 1 event
+
+
+def _run_pallas(mode: str, nranks: int, **over) -> AMRLBM:
+    cfg = {**BASE, "kernel_backend": "pallas", **over}
+    sim = AMRLBM(LidDrivenCavityConfig(nranks=nranks, stepping_mode=mode, **cfg))
+    sim.run(PALLAS_STEPS, amr_interval=PALLAS_INTERVAL)
+    return sim
+
+
+@pytest.fixture(scope="module")
+def pallas_reference() -> AMRLBM:
+    """Single-rank restack run on the pallas (interpret-on-CPU) kernel."""
+    return _run_pallas("restack", 1)
+
+
+@pytest.mark.parametrize(
+    "mode,nranks",
+    [("fused", 1), ("fused_sharded", 1), ("fused_sharded", 4)],
+)
+def test_pallas_fused_modes_match_pallas_restack_reference(
+    pallas_reference, mode, nranks
+):
+    """The halo-in-tile Pallas superstep (ghost ring scattered into the VMEM
+    tile before the stencil reads) is a faithful execution of the substep
+    cycle on its own backend, solo and sharded, across an AMR event."""
+    sim = _run_pallas(mode, nranks)
+    assert sim.amr_cycles >= 1, "the run must span at least one AMR event"
+    assert len(sim.forest.levels_in_use()) > 1
+    _assert_macroscopic_match(sim, pallas_reference)
+    assert abs(sim.total_mass() - pallas_reference.total_mass()) < 1e-6
+
+
+def test_pallas_fused_steady_state_performs_zero_host_transfers():
+    """Halo-in-tile stepping keeps the zero-host-transfer contract: the
+    ghost values are gathered and consumed inside the compiled superstep,
+    never materialized through the host."""
+    cfg = {**BASE, "kernel_backend": "pallas"}
+    sim = AMRLBM(LidDrivenCavityConfig(nranks=1, stepping_mode="fused", **cfg))
+    sim.advance(1)
+    res = sim.arena.device()
+    before = (res.h2d_transfers, res.d2h_transfers)
+    sim.advance(3)
+    assert (res.h2d_transfers, res.d2h_transfers) == before
+
+
+def test_pallas_donated_superstep_consumes_buffers_and_survives_amr():
+    """Explicit ``donate_pdfs=True``: the superstep ping-pongs the pdf
+    buffers in place (inputs are deleted after each call), AMR events rebuild
+    the programs without ever touching a stale donated buffer, and the
+    physics stays within float32 round-off of the undonated twin (donation
+    perturbs XLA:CPU codegen by ~1 ulp per step, which is why it is not the
+    CPU default)."""
+    cfg = {**BASE, "kernel_backend": "pallas"}
+    don = AMRLBM(
+        LidDrivenCavityConfig(
+            nranks=1, stepping_mode="fused", donate_pdfs=True, **cfg
+        )
+    )
+    ref = AMRLBM(
+        LidDrivenCavityConfig(
+            nranks=1, stepping_mode="fused", donate_pdfs=False, **cfg
+        )
+    )
+
+    don.advance(1)
+    lvl = min(don.forest.levels_in_use())
+    held = don.arena.device().fetch(lvl, "pdf")
+    don.advance(1)
+    assert held.is_deleted(), "donated superstep must consume its inputs"
+    ref.advance(2)
+
+    # cross an AMR event: programs rebuild, residency re-uploads — a stale
+    # donated buffer anywhere in the engine would raise on next use
+    don.adapt()
+    ref.adapt()
+    assert len(don.forest.levels_in_use()) > 1
+    don.advance(PALLAS_INTERVAL)
+    ref.advance(PALLAS_INTERVAL)
+    don.adapt()
+    ref.adapt()
+
+    # undonated twin: same program minus aliasing; only codegen round-off
+    assert don.amr_cycles >= 1
+    ref_blocks = {b.bid: b for b in ref.forest.all_blocks()}
+    got_blocks = {b.bid: b for b in don.forest.all_blocks()}
+    assert set(ref_blocks) == set(got_blocks)
+    don.materialize_host()
+    ref.materialize_host()
+    g = don.spec.ghost
+    sl = (Ellipsis,) + (slice(g, -g),) * 3
+    for bid, rb in ref_blocks.items():
+        np.testing.assert_allclose(
+            got_blocks[bid].data["pdf"][sl],
+            rb.data["pdf"][sl],
+            rtol=0,
+            atol=1e-6,
+        )
+    assert abs(don.total_mass() - ref.total_mass()) < 1e-6

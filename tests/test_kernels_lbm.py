@@ -86,3 +86,53 @@ def test_wall_cells_frozen_and_lid_injects_momentum():
     c = np.asarray(D3Q19.c, np.float32)
     mom_x = np.einsum("qxyz,q->xyz", fo, c[:, 0])
     assert mom_x[-2][m[-2] == CT_FLUID].mean() > 1e-5
+
+
+@pytest.mark.parametrize(
+    "backend,want_interpret,want_donate",
+    [("cpu", True, False), ("gpu", False, True), ("tpu", False, True)],
+)
+def test_build_time_flag_resolution_per_backend(
+    monkeypatch, backend, want_interpret, want_donate
+):
+    """Pin the build-time resolution of the kernel-dispatch flags.
+
+    ``interpret=None`` must resolve to "interpret iff CPU" (the old hardwired
+    ``interpret=True`` silently ran the Pallas interpreter on accelerators),
+    and ``donate=None`` to "donate iff not CPU" (XLA:CPU codegen under
+    aliasing drifts by one ulp, breaking bitwise conformance). Explicit bools
+    always win over the backend probe.
+    """
+    import jax
+
+    from repro.kernels.lbm_collide.lbm_collide import (
+        resolve_donate,
+        resolve_interpret,
+    )
+
+    monkeypatch.setattr(jax, "default_backend", lambda: backend)
+    assert resolve_interpret(None) is want_interpret
+    assert resolve_donate(None) is want_donate
+    # explicit overrides ignore the backend entirely
+    for flag in (True, False):
+        assert resolve_interpret(flag) is flag
+        assert resolve_donate(flag) is flag
+
+
+def test_flag_resolution_happens_at_build_time(monkeypatch):
+    """The backend probe runs when the program is built, not when it runs.
+
+    Build a fused superstep under a monkeypatched backend, then restore it:
+    the program must keep the resolution it was built with (here: the probe
+    is consulted during ``make_fused_superstep``, so patching afterwards has
+    no effect on the built program's kernels).
+    """
+    from repro.kernels.lbm_collide import ops
+
+    calls = []
+    real = ops.resolve_interpret
+    monkeypatch.setattr(
+        ops, "resolve_interpret", lambda v=None: calls.append(v) or real(v)
+    )
+    ops.make_stream_collide(omega=1.6, backend="pallas")
+    assert calls, "make_stream_collide must resolve interpret at build time"
