@@ -1,0 +1,62 @@
+"""Static analysis over the repo's own source and built exchange plans.
+
+Five checkers prove the data-plane contracts the runtime conformance tests
+can only spot-check (see ARCHITECTURE.md "Static analysis"):
+
+* ``host`` — no implicit device->host syncs in hot-path modules
+  (:func:`~repro.analysis.checkers.check_host_transfer`);
+* ``donation`` — no use-after-donate reads of consumed buffers
+  (:func:`~repro.analysis.checkers.check_donation`);
+* ``collective`` — stepping-path import closure is collective-free
+  (:func:`~repro.analysis.checkers.check_collective`);
+* ``protocol`` — compiled halo plans match pairwise, stay in bounds, and
+  cover the ghost ring exactly (:mod:`repro.analysis.protocol`);
+* ``retrace`` — static unstable-compile-cache patterns plus the runtime
+  :class:`~repro.analysis.retrace.RetraceSentinel` budget hook.
+
+Drive them via ``tools/repro_lint.py`` or the functions re-exported here.
+"""
+
+from .checkers import CHECKERS, run
+from .config import DEFAULTS, LintConfig, load_config
+from .findings import (
+    Annotations,
+    Finding,
+    apply_baseline,
+    line_hash,
+    load_baseline,
+    render,
+    scan_annotations,
+    write_baseline,
+)
+from .protocol import (
+    build_sweep_topology,
+    rank_slot_map,
+    sweep_topologies,
+    verify_compiled_rank_plan,
+    verify_ghost_plan,
+)
+from .retrace import RetraceSentinel, budget_findings
+
+__all__ = [
+    "CHECKERS",
+    "run",
+    "DEFAULTS",
+    "LintConfig",
+    "load_config",
+    "Annotations",
+    "Finding",
+    "apply_baseline",
+    "line_hash",
+    "load_baseline",
+    "render",
+    "scan_annotations",
+    "write_baseline",
+    "build_sweep_topology",
+    "rank_slot_map",
+    "sweep_topologies",
+    "verify_compiled_rank_plan",
+    "verify_ghost_plan",
+    "RetraceSentinel",
+    "budget_findings",
+]

@@ -1,0 +1,548 @@
+"""The source-level checkers: host-transfer, donation-safety, collective-free,
+retrace-static.
+
+Each checker is a function ``(cfg, cache) -> list[Finding]`` registered in
+:data:`CHECKERS`; :func:`run` drives any subset and folds in the
+annotation-hygiene findings (an ``-ok()`` with an empty reason is itself an
+error — an undocumented sanction is exactly the drift the annotation grammar
+exists to prevent). The paper invariant each checker guards is spelled out in
+ARCHITECTURE.md; the mechanics live here:
+
+* **host** — implicit device->host syncs in the designated hot-path modules
+  (config ``[tool.repro_lint.host_transfer]``). ``.item()``/``.tolist()``/
+  ``block_until_ready`` are flagged anywhere in a hot module;
+  ``np.asarray``/``np.array`` only in modules that import jax (halo.py is
+  numpy-only — there the same call is a host-side copy, not a sync) and only
+  when the argument isn't an obvious host value; ``float()``/``int()``/
+  ``bool()`` and ``for``-iteration only inside traced scopes and only on the
+  traced function's own parameters (host closures like lattice constants stay
+  legal).
+* **donation** — intra-function linear dataflow: a buffer passed to a program
+  built by one of the configured donating factories is dead afterwards; any
+  later read (including through a local alias or an attribute store) is a
+  use-after-donate. Rebinding revives: ``pdfs = fn(pdfs)`` is the sanctioned
+  idiom.
+* **collective** — no collective-class call (``psum``/``all_gather``/...) in
+  any module reachable from the stepping roots through the repo import graph
+  (control-plane modules excluded by config). The static twin of the Table-1
+  runtime assertions: stepping is p2p-only.
+* **retrace** — static unstable-compile-cache patterns: jit programs built
+  inside loops, jit of a lambda at function scope, traced closures over
+  mutated mutable locals, float-defaulted static args.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .astutil import (
+    Module,
+    ModuleCache,
+    ancestors,
+    call_name,
+    enclosing_def,
+    expr_key,
+    import_chain,
+    reachable,
+    root_name,
+    src_finding,
+    traced_defs,
+    _FUNC_DEFS,
+    _last_name,
+)
+from .config import LintConfig
+from .findings import Finding, line_hash
+
+__all__ = ["CHECKERS", "run", "annotation_findings"]
+
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_HOST_CASTS = {"float", "int", "bool"}
+_NP_COPY = {"asarray", "array"}
+# callees whose result is trivially a host value: casting it is not a sync
+_HOST_PRODUCERS = {
+    "list", "tuple", "dict", "sorted", "range", "len", "zip", "enumerate",
+    "sum", "min", "max", "str", "repr",
+}
+_MUTATORS = {
+    "append", "extend", "insert", "add", "update", "pop", "popitem",
+    "remove", "discard", "clear", "setdefault",
+}
+
+
+def _allowed(mod: Module, node: ast.AST, checker: str) -> bool:
+    return mod.annotations.allows(getattr(node, "lineno", 0), checker)
+
+
+def _is_host_value(expr: ast.expr) -> bool:
+    """Expressions that cannot be device arrays: literals, displays,
+    comprehensions, and calls to plain host builtins."""
+    if isinstance(
+        expr,
+        (
+            ast.Constant, ast.List, ast.Tuple, ast.Dict, ast.Set,
+            ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp,
+            ast.JoinedStr,
+        ),
+    ):
+        return True
+    if isinstance(expr, ast.Call) and call_name(expr) in _HOST_PRODUCERS:
+        return True
+    return False
+
+
+def _np_base(expr: ast.expr) -> bool:
+    return isinstance(expr, ast.Attribute) and _last_name(expr.value) in ("np", "numpy", "onp")
+
+
+def check_host_transfer(cfg: LintConfig, cache: ModuleCache) -> list[Finding]:
+    sec = cfg.section("host_transfer")
+    out: list[Finding] = []
+    for path in cache.files(sec["paths"]):
+        mod = cache.get(path)
+        if mod is None:
+            continue
+        traced = traced_defs(mod.tree)
+        traced_params: dict[ast.AST, set[str]] = {
+            d: {a.arg for a in (*d.args.posonlyargs, *d.args.args, *d.args.kwonlyargs)}
+            for d in traced
+        }
+
+        def in_traced_on_param(node: ast.AST, value: ast.expr) -> bool:
+            d = enclosing_def(node)
+            while d is not None and d not in traced_params:
+                d = enclosing_def(d)
+            return d is not None and root_name(value) in traced_params[d]
+
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                name = call_name(node)
+                if isinstance(node.func, ast.Attribute) and name in _SYNC_METHODS:
+                    if not _allowed(mod, node, "host"):
+                        out.append(src_finding(
+                            mod, "host", node.lineno,
+                            f".{name}() forces a device->host sync",
+                            "keep the value on device, or annotate the "
+                            "sanctioned sync with '# repro: host-ok(reason)'",
+                        ))
+                elif name == "block_until_ready" and not _allowed(mod, node, "host"):
+                    out.append(src_finding(
+                        mod, "host", node.lineno,
+                        "block_until_ready() stalls the device pipeline",
+                        "only benchmarks may fence; annotate with "
+                        "'# repro: host-ok(reason)' if this fence is the contract",
+                    ))
+                elif (
+                    name in _NP_COPY
+                    and _np_base(node.func)
+                    and mod.imports_jax
+                    and node.args
+                    and not _is_host_value(node.args[0])
+                    and not _allowed(mod, node, "host")
+                ):
+                    out.append(src_finding(
+                        mod, "host", node.lineno,
+                        f"np.{name}() on a possibly device-resident value is "
+                        "an implicit device->host transfer",
+                        "use jnp on device, or annotate the sanctioned "
+                        "materialization with '# repro: host-ok(reason)'",
+                    ))
+                elif (
+                    name in _HOST_CASTS
+                    and isinstance(node.func, ast.Name)
+                    and node.args
+                    and in_traced_on_param(node, node.args[0])
+                    and not _allowed(mod, node, "host")
+                ):
+                    out.append(src_finding(
+                        mod, "host", node.lineno,
+                        f"{name}() on a traced value forces a concretization "
+                        "(device->host sync or tracer error)",
+                        "keep the computation in jnp ops",
+                    ))
+            elif isinstance(node, ast.For):
+                if in_traced_on_param(node, node.iter) and not _allowed(mod, node, "host"):
+                    out.append(src_finding(
+                        mod, "host", node.lineno,
+                        "Python iteration over a traced array unrolls on host "
+                        "(one sync per element)",
+                        "vectorize with jnp ops or lax primitives",
+                    ))
+    return out
+
+
+# -- donation safety ---------------------------------------------------------------
+
+
+class _DonationScan:
+    """Linear intra-function dataflow over one def body.
+
+    State: ``donors`` — access paths bound to donating programs; ``dead`` —
+    access paths whose buffer was consumed (value: donation line); ``groups``
+    — alias sets (``a = b`` makes a and b die together). Statements are
+    visited in source order (branches sequentially — the checker
+    over-approximates; annotations cover the rare intentional case).
+    """
+
+    def __init__(self, mod: Module, factories: set[str]):
+        self.mod = mod
+        self.factories = factories
+        self.donors: set[str] = set()
+        self.dead: dict[str, int] = {}
+        self.groups: dict[str, set[str]] = {}
+        self.findings: list[Finding] = []
+
+    def _group(self, key: str) -> set[str]:
+        return self.groups.setdefault(key, {key})
+
+    def _alias(self, target: str, source: str) -> None:
+        g = self._group(source)
+        g.add(target)
+        self.groups[target] = g
+
+    def _kill(self, key: str, lineno: int) -> None:
+        for member in self._group(key):
+            self.dead.setdefault(member, lineno)
+
+    def _revive(self, key: str) -> None:
+        self.dead.pop(key, None)
+        for k in [k for k in self.dead if k.startswith(key + "[") or k.startswith(key + ".")]:
+            self.dead.pop(k)
+        g = self.groups.pop(key, None)
+        if g is not None:
+            g.discard(key)
+        self.donors.discard(key)
+
+    def _check_reads(self, node: ast.AST, skip: set[ast.AST]) -> None:
+        for sub in ast.walk(node):
+            if sub in skip or not isinstance(sub, (ast.Name, ast.Attribute, ast.Subscript)):
+                continue
+            if isinstance(getattr(sub, "ctx", None), (ast.Store, ast.Del)):
+                continue
+            # only the outermost tracked expression counts as the read
+            parent = getattr(sub, "parent", None)
+            if isinstance(parent, (ast.Attribute, ast.Subscript)) and expr_key(parent):
+                continue
+            key = expr_key(sub)
+            if not key:
+                continue
+            hit = next(
+                (d for d in self.dead
+                 if key == d or key.startswith(d + "[") or key.startswith(d + ".")),
+                None,
+            )
+            if hit is not None and not _allowed(self.mod, sub, "donation"):
+                self.findings.append(src_finding(
+                    self.mod, "donation", sub.lineno,
+                    f"read of '{key}' after its buffer was donated on line "
+                    f"{self.dead[hit]} (use-after-donate: the array is "
+                    "consumed by the donating program)",
+                    "rebind the result over the operand "
+                    "('pdfs = fn(pdfs)') or copy before donating",
+                ))
+
+    def _donations(self, node: ast.AST) -> set[ast.AST]:
+        """Mark first-arg donations for calls of donor programs; returns the
+        consumed arg nodes (their read happens at donation, not after)."""
+        consumed: set[ast.AST] = set()
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call) or not sub.args:
+                continue
+            fkey = expr_key(sub.func)
+            if fkey not in self.donors:
+                continue
+            arg = sub.args[0]
+            key = expr_key(arg)
+            if key:
+                consumed.add(arg)
+                self._kill(key, sub.lineno)
+        return consumed
+
+    def _seed_donors(self, value: ast.expr, targets: list[ast.expr]) -> None:
+        calls = [value] if isinstance(value, ast.Call) else []
+        if not calls or call_name(calls[0]) not in self.factories:
+            # jax.jit(..., donate_argnums=...) builds a donor directly
+            if not (
+                isinstance(value, ast.Call)
+                and call_name(value) in ("jit", "pjit")
+                and any(k.arg in ("donate_argnums", "donate_argnames") for k in value.keywords)
+            ):
+                return
+        names: list[ast.expr] = []
+        for t in targets:
+            names.extend(t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t])
+        for t in names:
+            key = expr_key(t)
+            if key:
+                self.donors.add(key)
+
+    def stmt(self, node: ast.stmt) -> None:
+        if isinstance(node, _FUNC_DEFS):
+            return  # nested defs get their own scan
+        targets: list[ast.expr] = []
+        value: ast.expr | None = None
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        elif isinstance(node, ast.AugAssign):
+            # target is read-modify-write: the read is checked, no revive
+            self._check_reads(node, skip=set())
+            self._donations(node)
+            return
+
+        # reads first (RHS evaluates before the store), skipping the args a
+        # donation itself consumes — 'pdfs = fn(pdfs)' reads a live buffer
+        consumed = self._donations(node)
+        check_root = value if value is not None else node
+        self._check_reads(check_root, skip=consumed)
+        if value is not None:
+            # rebinds revive the old binding first, then the new value may
+            # seed a donor or alias the source
+            src_key = expr_key(value)
+            flat: list[ast.expr] = []
+            for t in targets:
+                flat.extend(t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t])
+            for t in flat:
+                tkey = expr_key(t)
+                if not tkey:
+                    continue
+                self._revive(tkey)
+                if src_key and len(flat) == 1:
+                    self._alias(tkey, src_key)
+            self._seed_donors(value, targets)
+        # recurse into compound bodies in source order
+        for attr in ("body", "orelse", "finalbody"):
+            for sub in getattr(node, attr, ()) or ():
+                self.stmt(sub)
+        for h in getattr(node, "handlers", ()) or ():
+            for sub in h.body:
+                self.stmt(sub)
+
+
+def check_donation(cfg: LintConfig, cache: ModuleCache) -> list[Finding]:
+    sec = cfg.section("donation")
+    factories = set(sec["factories"])
+    out: list[Finding] = []
+    for path in cache.files(sec["paths"]):
+        mod = cache.get(path)
+        if mod is None:
+            continue
+        for d in ast.walk(mod.tree):
+            if not isinstance(d, _FUNC_DEFS):
+                continue
+            scan = _DonationScan(mod, factories)
+            for stmt in d.body:
+                scan.stmt(stmt)
+            out.extend(scan.findings)
+    return out
+
+
+# -- collective-free stepping ------------------------------------------------------
+
+
+def check_collective(cfg: LintConfig, cache: ModuleCache) -> list[Finding]:
+    sec = cfg.section("collective")
+    collectives = set(sec["collectives"])
+    modules = cache.src_modules()
+    seen = reachable(list(sec["stepping_modules"]), modules, set(sec["exclude"]))
+    out: list[Finding] = []
+    for name in sorted(seen):
+        mod = modules[name]
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call) or call_name(node) not in collectives:
+                continue
+            # a collective implementing itself in the fabric (Comm.allreduce's
+            # body) is the provider, not a stepping-path caller
+            encl = enclosing_def(node)
+            if encl is not None and encl.name in collectives:
+                continue
+            if _allowed(mod, node, "collective"):
+                continue
+            out.append(src_finding(
+                mod, "collective", node.lineno,
+                f"collective '{call_name(node)}' reachable from the stepping "
+                f"path (import chain: {import_chain(name, seen)}) — stepping "
+                "must be p2p-only (paper §2, Table 1)",
+                "move the collective to a control-plane module (AMR cycle), "
+                "or annotate with '# repro: collective-ok(reason)'",
+            ))
+    return out
+
+
+# -- retrace static scan -----------------------------------------------------------
+
+
+def _jit_like(node: ast.Call) -> bool:
+    return call_name(node) in ("jit", "pjit")
+
+
+def check_retrace(cfg: LintConfig, cache: ModuleCache) -> list[Finding]:
+    sec = cfg.section("retrace")
+    out: list[Finding] = []
+    for path in cache.files(sec["paths"]):
+        mod = cache.get(path)
+        if mod is None:
+            continue
+        traced = traced_defs(mod.tree)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and _jit_like(node):
+                if _allowed(mod, node, "retrace"):
+                    continue
+                in_loop = any(isinstance(a, (ast.For, ast.While)) for a in ancestors(node))
+                if in_loop:
+                    out.append(src_finding(
+                        mod, "retrace", node.lineno,
+                        "jit program constructed inside a loop: every "
+                        "iteration builds a fresh cache entry (retrace + "
+                        "compile per iteration)",
+                        "hoist the jit() out of the loop or cache the "
+                        "program keyed on its static config",
+                    ))
+                if node.args and isinstance(node.args[0], ast.Lambda) and enclosing_def(node):
+                    out.append(src_finding(
+                        mod, "retrace", node.lineno,
+                        "jit of a lambda at function scope: a new function "
+                        "object per call defeats the jit cache",
+                        "define the function once at module or factory scope",
+                    ))
+                out.extend(_float_static_args(mod, node))
+        out.extend(_mutable_closures(mod, traced))
+    return out
+
+
+def _float_static_args(mod: Module, node: ast.Call) -> list[Finding]:
+    """jit(fn, static_argnums=...) where fn's param at a static position has a
+    float default: float statics hash by value, so every perturbation (sweep,
+    annealing schedule) recompiles."""
+    static: list[int] = []
+    for kw in node.keywords:
+        if kw.arg == "static_argnums":
+            vals = kw.value.elts if isinstance(kw.value, ast.Tuple) else [kw.value]
+            static = [v.value for v in vals if isinstance(v, ast.Constant) and isinstance(v.value, int)]
+    if not static or not node.args or not isinstance(node.args[0], ast.Name):
+        return []
+    fn_def = next(
+        (d for d in ast.walk(mod.tree)
+         if isinstance(d, _FUNC_DEFS) and d.name == node.args[0].id),
+        None,
+    )
+    if fn_def is None:
+        return []
+    args = [*fn_def.args.posonlyargs, *fn_def.args.args]
+    defaults = fn_def.args.defaults
+    default_of = dict(zip([a.arg for a in args[len(args) - len(defaults):]], defaults))
+    out = []
+    for i in static:
+        if i >= len(args):
+            continue
+        dflt = default_of.get(args[i].arg)
+        if isinstance(dflt, ast.Constant) and isinstance(dflt.value, float):
+            if not _allowed(mod, node, "retrace"):
+                out.append(src_finding(
+                    mod, "retrace", node.lineno,
+                    f"static arg '{args[i].arg}' (position {i}) defaults to a "
+                    "float: float statics recompile on every distinct value",
+                    "pass it as a traced operand, or quantize it into the "
+                    "program's static config",
+                ))
+    return out
+
+
+def _mutable_closures(mod: Module, traced: set[ast.AST]) -> list[Finding]:
+    """Traced inner defs closing over a mutable local of the factory that the
+    factory (or the traced body) also mutates: the closure cell changes under
+    the jit cache's feet — either silently stale (captured at trace time) or
+    a retrace source when used as a static."""
+    out: list[Finding] = []
+    for inner in traced:
+        outer = enclosing_def(inner)
+        if outer is None:
+            continue
+        inner_locals = {a.arg for a in (*inner.args.posonlyargs, *inner.args.args, *inner.args.kwonlyargs)}
+        for n in ast.walk(inner):
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+                inner_locals.add(n.id)
+        mutable_locals: set[str] = set()
+        for stmt in ast.walk(outer):
+            if isinstance(stmt, ast.Assign) and isinstance(
+                stmt.value, (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp, ast.SetComp)
+            ):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        mutable_locals.add(t.id)
+        if not mutable_locals:
+            continue
+        mutated = {
+            root_name(n.func.value)
+            for n in ast.walk(outer)
+            if isinstance(n, ast.Call)
+            and isinstance(n.func, ast.Attribute)
+            and n.func.attr in _MUTATORS
+        } | {
+            root_name(n.targets[0] if isinstance(n, ast.Assign) else n.target)
+            for n in ast.walk(outer)
+            if isinstance(n, (ast.Assign, ast.AugAssign))
+            and isinstance((n.targets[0] if isinstance(n, ast.Assign) else n.target), ast.Subscript)
+        }
+        for n in ast.walk(inner):
+            if (
+                isinstance(n, ast.Name)
+                and isinstance(n.ctx, ast.Load)
+                and n.id in mutable_locals
+                and n.id in mutated
+                and n.id not in inner_locals
+                and not _allowed(mod, n, "retrace")
+            ):
+                out.append(src_finding(
+                    mod, "retrace", inner.lineno,
+                    f"traced function '{inner.name}' closes over mutable "
+                    f"local '{n.id}' that the factory mutates: the traced "
+                    "program captures a snapshot, later mutations are "
+                    "silently ignored (or force retraces)",
+                    "freeze the value (tuple) before tracing, or pass it "
+                    "as an operand",
+                ))
+                break
+    return out
+
+
+# -- runner ------------------------------------------------------------------------
+
+
+def annotation_findings(cfg: LintConfig, cache: ModuleCache) -> list[Finding]:
+    """Empty-reason annotations across every scanned file."""
+    paths: set[Path] = set()
+    for sec_name in ("host_transfer", "donation", "retrace"):
+        paths.update(cache.files(cfg.section(sec_name)["paths"]))
+    out: list[Finding] = []
+    for path in sorted(paths):
+        mod = cache.get(path)
+        if mod is None:
+            continue
+        for lineno, checker in mod.annotations.empty:
+            out.append(src_finding(
+                mod, "annotation", lineno,
+                f"'{checker}-ok()' has an empty reason — every sanctioned "
+                "finding must document why it is sanctioned",
+                f"write '# repro: {checker}-ok(<why this is safe>)'",
+            ))
+    return out
+
+
+CHECKERS = {
+    "host": check_host_transfer,
+    "donation": check_donation,
+    "collective": check_collective,
+    "retrace": check_retrace,
+}
+
+
+def run(cfg: LintConfig, names: list[str] | None = None, cache: ModuleCache | None = None) -> list[Finding]:
+    cache = cache or ModuleCache(cfg.repo_root)
+    names = names or list(CHECKERS)
+    out: list[Finding] = []
+    for name in names:
+        out.extend(CHECKERS[name](cfg, cache))
+    out.extend(annotation_findings(cfg, cache))
+    return sorted(out, key=lambda f: (f.path, f.line, f.checker))

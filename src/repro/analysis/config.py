@@ -1,0 +1,216 @@
+"""Per-path lint configuration, read from ``pyproject.toml``.
+
+The ``[tool.repro_lint]`` tables declare what each checker covers — the
+designated hot-path modules for the host-transfer lint, the stepping-path
+roots and control-plane exclusions for the collective-free check, the
+donation factories, and the per-engine compile budgets the retrace sentinel
+enforces. :data:`DEFAULTS` mirrors the committed ``pyproject.toml`` so the
+checkers keep working when invoked on a tree without the section (fixtures,
+external checkouts); anything present in ``pyproject.toml`` overrides the
+default key-by-key.
+
+``tomllib`` only exists on Python 3.11+; the repo supports 3.10, so a tiny
+fallback parser covers the TOML subset these tables use (string/int/float/
+bool scalars, homogeneous arrays, dotted table headers, inline tables are
+NOT needed). No third-party dependency is involved either way.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from pathlib import Path
+
+__all__ = ["LintConfig", "load_config", "DEFAULTS"]
+
+
+DEFAULTS: dict = {
+    "baseline": "tools/repro_lint_baseline.json",
+    "host_transfer": {
+        # the designated hot-path modules: every implicit device->host sync
+        # here is either a bug or carries a documented host-ok annotation
+        "paths": [
+            "src/repro/lbm/engines.py",
+            "src/repro/lbm/halo.py",
+            "src/repro/kernels/lbm_collide",
+            "src/repro/serving/ensemble.py",
+        ],
+    },
+    "donation": {
+        # modules scanned for use-after-donate (tests included: un-audited
+        # reads of donated pdf buffers in test helpers are real bugs)
+        "paths": ["src/repro", "tests"],
+        # calls whose result is a donating program (donate_argnums on the
+        # pdf operand): reading a buffer after passing it to one is a
+        # use-after-donate unless the same statement rebinds it
+        "factories": [
+            "make_fused_superstep",
+            "make_rank_absorb",
+            "make_rank_absorb_split",
+            "_fused_program",
+        ],
+    },
+    "collective": {
+        # stepping-path roots: the import closure of these modules must be
+        # collective-free (the static twin of the Table-1 runtime tests)
+        "stepping_modules": [
+            "repro.lbm.engines",
+            "repro.lbm.halo",
+            "repro.kernels.lbm_collide.ops",
+            "repro.kernels.lbm_collide.lbm_collide",
+            "repro.kernels.lbm_collide.ref",
+            "repro.serving.ensemble",
+        ],
+        # control-plane modules: reachable via package imports but only ever
+        # invoked from adapt()/AMR cycles, where collectives are sanctioned
+        # (balancing, marking, proxy migration, checkpoint codecs)
+        "exclude": [
+            "repro.core.balancing",
+            "repro.core.refine",
+            "repro.core.pipeline",
+            "repro.core.proxy",
+            "repro.core.migration",
+            "repro.core.checkpoint",
+            "repro.core.resilience",
+        ],
+        # collective-class call names; ppermute/collective_permute are
+        # deliberately absent — p2p next-neighbor traffic is the paper's
+        # sanctioned communication pattern
+        "collectives": [
+            "psum",
+            "pmean",
+            "pmax",
+            "pmin",
+            "all_gather",
+            "allgather",
+            "all_reduce",
+            "allreduce",
+            "all_to_all",
+            "alltoall",
+            "reduce_scatter",
+        ],
+    },
+    "retrace": {
+        "paths": ["src/repro"],
+        # expected-compile-count budgets per engine for the canonical
+        # conformance scenario (2 coarse steps + 1 AMR event at 4 ranks);
+        # enforced by tests/test_analysis.py through RetraceSentinel
+        "budgets": {"fused": 12, "fused_sharded": 40},
+    },
+    "protocol": {
+        # rank counts the CLI topology sweep verifies (matching the 1/4/13
+        # conformance topologies)
+        "ranks": [1, 4, 13],
+    },
+}
+
+
+@dataclass
+class LintConfig:
+    repo_root: Path
+    raw: dict = field(default_factory=dict)
+
+    def section(self, name: str) -> dict:
+        merged = dict(DEFAULTS.get(name, {}))
+        merged.update(self.raw.get(name, {}))
+        return merged
+
+    @property
+    def baseline_path(self) -> Path:
+        return self.repo_root / self.raw.get("baseline", DEFAULTS["baseline"])
+
+
+def _parse_toml(text: str) -> dict:
+    try:
+        import tomllib  # Python 3.11+
+
+        return tomllib.loads(text)
+    except ModuleNotFoundError:  # pragma: no cover - 3.10 fallback
+        return _parse_toml_subset(text)
+
+
+def _parse_scalar(tok: str):
+    tok = tok.strip()
+    if tok.startswith(('"', "'")):
+        return tok[1:-1]
+    if tok in ("true", "false"):
+        return tok == "true"
+    try:
+        return int(tok)
+    except ValueError:
+        pass
+    try:
+        return float(tok)
+    except ValueError:
+        return tok
+
+
+def _split_items(body: str) -> list[str]:
+    """Split a bracketed body on top-level commas (strings may hold commas)."""
+    items, cur, quote = [], "", None
+    for ch in body:
+        if quote:
+            cur += ch
+            if ch == quote:
+                quote = None
+        elif ch in "\"'":
+            quote = ch
+            cur += ch
+        elif ch == ",":
+            items.append(cur)
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        items.append(cur)
+    return items
+
+
+def _parse_toml_subset(text: str) -> dict:  # pragma: no cover - 3.10 fallback
+    """Minimal TOML for the repro_lint tables (see module docstring)."""
+    root: dict = {}
+    table = root
+    pending_key: str | None = None
+    pending_buf = ""
+    for raw_line in text.splitlines():
+        line = raw_line.strip()
+        if pending_key is not None:
+            pending_buf += " " + line
+            if line.endswith("]"):
+                table[pending_key] = [
+                    _parse_scalar(t) for t in _split_items(pending_buf.strip()[1:-1])
+                ]
+                pending_key = None
+            continue
+        if not line or line.startswith("#"):
+            continue
+        if line.startswith("["):
+            table = root
+            for part in line.strip("[]").split("."):
+                table = table.setdefault(part.strip().strip('"'), {})
+            continue
+        if "=" not in line:
+            continue
+        key, _, val = line.partition("=")
+        key, val = key.strip().strip('"'), val.split(" #")[0].strip()
+        if val.startswith("[") and not val.endswith("]"):
+            pending_key, pending_buf = key, val
+        elif val.startswith("["):
+            table[key] = [_parse_scalar(t) for t in _split_items(val[1:-1])]
+        elif val.startswith("{"):
+            inline: dict = {}
+            for item in _split_items(val[1:-1]):
+                k, _, v = item.partition("=")
+                inline[k.strip().strip('"')] = _parse_scalar(v)
+            table[key] = inline
+        else:
+            table[key] = _parse_scalar(val)
+    return root
+
+
+def load_config(repo_root: Path) -> LintConfig:
+    pyproject = repo_root / "pyproject.toml"
+    raw: dict = {}
+    if pyproject.exists():
+        data = _parse_toml(pyproject.read_text())
+        raw = data.get("tool", {}).get("repro_lint", {})
+    return LintConfig(repo_root=repo_root, raw=raw)

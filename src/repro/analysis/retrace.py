@@ -1,0 +1,93 @@
+"""Retrace sentinel: count actual jit traces and enforce compile budgets.
+
+The static scan in :mod:`repro.analysis.checkers` catches the *patterns* that
+cause unstable compile caches; this module measures the *fact*: every
+``jax.jit`` created while a :class:`RetraceSentinel` is active gets a
+counting shim around its wrapped Python function, so each trace (the wrapped
+function's Python body runs once per cache miss) increments a counter keyed
+by the function's qualname. An engine whose plan-cache versioning works
+compiles a bounded number of programs per scenario (per arena version, not
+per step); the per-engine budgets live in ``[tool.repro_lint.retrace]`` and
+``tests/test_analysis.py`` holds the line.
+
+The sentinel patches ``jax.jit`` only for the duration of the ``with`` block
+and restores it on exit, even on error. The repo always calls ``jax.jit``
+through the module attribute, so the patch sees every program build; programs
+built *before* entering the sentinel keep their original uncounted wrappers
+(that is the point — a warm cache must not trace at all).
+"""
+
+from __future__ import annotations
+
+import functools
+
+from .findings import Finding
+
+__all__ = ["RetraceSentinel", "budget_findings"]
+
+
+class RetraceSentinel:
+    """Context manager instrumenting ``jax.jit`` to count traces."""
+
+    def __init__(self):
+        self.counts: dict[str, int] = {}
+        self._orig = None
+
+    def total(self) -> int:
+        return sum(self.counts.values())
+
+    def _count_wrap(self, fun):
+        name = getattr(fun, "__qualname__", None) or repr(fun)
+
+        @functools.wraps(fun)
+        def counting(*args, **kwargs):
+            self.counts[name] = self.counts.get(name, 0) + 1
+            return fun(*args, **kwargs)
+
+        return counting
+
+    def __enter__(self):
+        import jax
+
+        self._orig = jax.jit
+        orig = self._orig
+        sentinel = self
+
+        def counted_jit(fun=None, **kwargs):
+            if fun is None:  # jax.jit(**kw) decorator-factory form
+                return lambda f: counted_jit(f, **kwargs)
+            return orig(sentinel._count_wrap(fun), **kwargs)
+
+        jax.jit = counted_jit
+        return self
+
+    def __exit__(self, *exc):
+        import jax
+
+        jax.jit = self._orig
+        return False
+
+
+def budget_findings(label: str, counts: dict[str, int], budget: int) -> list[Finding]:
+    """Compare measured trace counts against an engine's compile budget."""
+    total = sum(counts.values())
+    if total <= budget:
+        return []
+    worst = sorted(counts.items(), key=lambda kv: -kv[1])[:5]
+    detail = ", ".join(f"{name}={n}" for name, n in worst)
+    return [
+        Finding(
+            checker="retrace",
+            severity="error",
+            path=f"<retrace:{label}>",
+            line=0,
+            message=(
+                f"engine '{label}' traced {total} times, budget is {budget} "
+                f"(top tracers: {detail}) — a plan-cache version token is "
+                "probably not keying a program cache, or a static arg is "
+                "unstable"
+            ),
+            fix_hint="key program caches on arena.version; keep static args "
+            "hashable and low-cardinality",
+        )
+    ]

@@ -97,10 +97,10 @@ def _stream_collide_body(
     """Shared stream+collide body on one VMEM-resident (Q, X, Y, Z) block."""
     dtype = f.dtype
     Q = lattice.Q
-    c = np.asarray(lattice.c)
-    w = np.asarray(lattice.w)
-    opp = np.asarray(lattice.opposite)
-    uw = np.asarray(u_wall, dtype=np.float64)
+    c = np.asarray(lattice.c)  # repro: host-ok(lattice constants are host numpy, baked into the traced program)
+    w = np.asarray(lattice.w)  # repro: host-ok(lattice constants are host numpy, baked into the traced program)
+    opp = np.asarray(lattice.opposite)  # repro: host-ok(lattice constants are host numpy, baked into the traced program)
+    uw = np.asarray(u_wall, dtype=np.float64)  # repro: host-ok(lattice constants are host numpy, baked into the traced program)
 
     is_fluid_src = []
     pulled = []

@@ -136,6 +136,7 @@ def make_arena_stream_collide(
 
     def step_arena(f_buf: np.ndarray, mask: jax.Array | np.ndarray) -> None:
         out = step(jnp.asarray(f_buf), jnp.asarray(mask))
+        # repro: host-ok(arena-mode copy-out contract: results land in the host arena each step)
         np.copyto(f_buf, np.asarray(out))
 
     return step_arena
@@ -210,6 +211,7 @@ def make_halo_stream_collide(
     ``mask`` is the level's host ``(B, X, Y, Z)`` cell-type stack, closed
     over as a constant (programs are rebuilt on mask refresh / AMR events).
     """
+    # repro: host-ok(build-time mask normalization, outside the stepping loop)
     mask = np.asarray(mask)
     nblocks = mask.shape[0]
     dims = mask.shape[1:]
@@ -542,6 +544,7 @@ def make_ensemble_superstep(
     # or XLA:CPU's context-dependent rounding breaks the per-member bitwise
     # contract (a structurally different batch drifts by one ulp)
     premasks = {
+        # repro: host-ok(build-time d2h of the mask stack for selector precompute, once per program build)
         l: precompute_stream_masks(np.asarray(masks[l]), lattice) for l in levels
     }
     pm_t = {
@@ -828,6 +831,7 @@ def make_rank_absorb_split(
     :func:`~.lbm_collide.resolve_donate`) is on.
     """
     order = tuple(sorted(active_levels, reverse=True))
+    # repro: host-ok(build-time d2h of mask stacks for program lowering, once per arena version)
     masks_np = {l: np.asarray(masks[l]) for l in order}
     bnd = boundary_slot_sets(messages, masks_np)
     idx_int = {

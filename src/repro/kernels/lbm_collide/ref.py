@@ -82,9 +82,9 @@ def collision_coeffs(
     produces bitwise-identical results to baking them in as constants (the
     single-run path): the rounding to ``dtype`` happens here, once, either way.
     """
-    c = np.asarray(lattice.c)
-    w = np.asarray(lattice.w)
-    uw = np.asarray(u_wall, dtype=np.float64)
+    c = np.asarray(lattice.c)  # repro: host-ok(lattice constants are host numpy, folded into the program)
+    w = np.asarray(lattice.w)  # repro: host-ok(lattice constants are host numpy, folded into the program)
+    uw = np.asarray(u_wall, dtype=np.float64)  # repro: host-ok(lattice constants are host numpy, folded into the program)
     # velocity bounce-back momentum term per direction: 6 w_q (c_q . u_wall)
     lid = np.array(
         [6.0 * w[q] * float(c[q] @ uw) for q in range(lattice.Q)], dtype=dtype
@@ -118,9 +118,10 @@ def precompute_stream_masks(mask, lattice: Lattice = D3Q19) -> dict[str, np.ndar
     rolls act on the trailing three axes and the ``q`` axis leads:
     ``fluid_src``/``lid_src`` are ``(Q, *mask.shape)`` bool.
     """
+    # repro: host-ok(mask selector precompute is host-side by design, once per program build)
     m = np.asarray(mask)
     Q = lattice.Q
-    c = np.asarray(lattice.c)
+    c = np.asarray(lattice.c)  # repro: host-ok(lattice constants are host numpy, folded into the program)
     fluid_src = np.empty((Q,) + m.shape, dtype=bool)
     lid_src = np.empty((Q,) + m.shape, dtype=bool)
     for q in range(Q):
@@ -152,8 +153,8 @@ def stream_collide_coeffs(
     """
     dtype = f.dtype
     Q = lattice.Q
-    c = np.asarray(lattice.c)
-    opp = np.asarray(lattice.opposite)
+    c = np.asarray(lattice.c)  # repro: host-ok(lattice constants are host numpy, folded into the program)
+    opp = np.asarray(lattice.opposite)  # repro: host-ok(lattice constants are host numpy, folded into the program)
     lid = coeffs["lid"]
 
     # -- pull streaming with bounce-back ------------------------------------

@@ -35,6 +35,7 @@ __all__ = [
     "analyze_hlo",
     "roofline_terms",
     "HloStats",
+    "count_transfer_ops",
 ]
 
 
@@ -249,6 +250,48 @@ def analyze_hlo(text: str) -> HloStats:
         stats.dot_flops_total += m * st.dot_flops
     stats.collective_bytes_total = sum(stats.collective_bytes.values())
     return stats
+
+
+# host<->device transfer evidence in compiled HLO: infeed/outfeed ops,
+# send/recv marked as host transfers, custom-calls into Python/host callbacks,
+# and operands/results placed in host memory space (S(5) layout annotations)
+# the result type between '=' and the opcode may be bare ("token[]") or a
+# parenthesized tuple ("(f32[8], token[])")
+_TRANSFER_OP_RE = re.compile(r"=\s*[^=]*?\b(infeed|outfeed)\(")
+_HOST_SENDRECV_RE = re.compile(r"\b(send|recv|send-done|recv-done)\(.*is_host_transfer=true")
+_HOST_CALLBACK_RE = re.compile(
+    r'custom_call_target="([^"]*(?:callback|[Hh]ost[Tt]ransfer|[Hh]ost[Cc]ompute)[^"]*)"'
+)
+_HOST_SPACE_RE = re.compile(r"\{[^}]*:S\(5\)\}")
+
+
+def count_transfer_ops(text: str) -> dict[str, int]:
+    """Count host<->device transfer ops in compiled HLO text.
+
+    The IR-level twin of the source-level host-transfer lint
+    (``tools/repro_lint.py``): a stepping program that is transfer-free at
+    the source level must also lower to a module with zero infeeds/outfeeds,
+    zero host-transfer send/recv pairs, zero host-callback custom-calls and
+    no host-memory-space (``S(5)``) placements. Returns per-kind counts plus
+    a ``"total"`` entry; ``tools/analyze_hlo.py --assert-no-transfers``
+    fails on a nonzero total.
+    """
+    counts = {
+        "infeed_outfeed": 0,
+        "host_send_recv": 0,
+        "host_callback": 0,
+        "host_memory_space": 0,
+    }
+    for line in text.splitlines():
+        if _TRANSFER_OP_RE.search(line):
+            counts["infeed_outfeed"] += 1
+        if _HOST_SENDRECV_RE.search(line):
+            counts["host_send_recv"] += 1
+        if _HOST_CALLBACK_RE.search(line):
+            counts["host_callback"] += 1
+        counts["host_memory_space"] += len(_HOST_SPACE_RE.findall(line))
+    counts["total"] = sum(counts.values())
+    return counts
 
 
 def roofline_terms(

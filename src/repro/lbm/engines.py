@@ -258,7 +258,8 @@ class RestackEngine(StepEngine):
         f = jnp.asarray(np.stack([b.data["pdf"] for b in blocks]))
         m = jnp.asarray(np.stack([b.data["mask"] for b in blocks]))
         f = self._stepper(level)(f, m)
-        out = np.array(f)  # copy out of the (read-only) jax buffer
+        # repro: host-ok(restack-mode copy-out contract: results return to host block storage)
+        out = np.array(f)
         for i, b in enumerate(blocks):
             b.data["pdf"] = out[i]
 
@@ -348,6 +349,7 @@ class FusedEngine(ArenaEngine):
             for p in range(lmax + 1)
         }
         res = self.arena.device()
+        # repro: host-ok(mask copy at program build, once per arena version)
         masks_host = {l: np.array(self.arena.buffer(l, "mask")) for l in levels}
         self._fused_fn = make_fused_superstep(
             levels=levels,
@@ -374,6 +376,7 @@ class FusedEngine(ArenaEngine):
         t0 = time.perf_counter()
         for _ in range(coarse_steps):
             pdfs = fn(pdfs)
+        # repro: host-ok(timing fence: StageStats seconds must not hide queued device work)
         jax.block_until_ready(pdfs)
         for l, arr in zip(levels, pdfs):
             res.store(l, "pdf", arr)
@@ -581,6 +584,7 @@ class FusedShardedEngine(ShardedEngine):
                 steppers = {l: self._fused_stepper(l) for l in rank_levels[r]}
                 masks_dev = {l: res.fetch(l, "mask") for l in rank_levels[r]}
                 masks_host = {
+                    # repro: host-ok(mask copy at program build, once per arena version)
                     l: np.array(per_rank[r].buffer(l, "mask"))
                     for l in rank_levels[r]
                 }
@@ -686,6 +690,7 @@ class FusedShardedEngine(ShardedEngine):
                         continue
                     msgs = tuple(by_key[m.key] for m in progs.recvs[p][r])
                     pdfs[r] = absorb(pdfs[r], msgs)
+        # repro: host-ok(timing fence: StageStats seconds must not hide queued device work)
         jax.block_until_ready([pdfs[r] for r in progs.ranks])
         for r in progs.ranks:
             for l, arr in zip(progs.rank_levels[r], pdfs[r]):

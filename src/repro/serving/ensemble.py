@@ -283,6 +283,7 @@ class Ensemble:
             "member arenas rebound under unmaterialized device state"
         )
         for l in self._dev_levels:
+            # repro: host-ok(explicit materialize contract, accounted in d2h_bytes)
             host = np.asarray(self._dev[l])
             self.d2h_bytes += host.nbytes
             for i, m in enumerate(self.members):
@@ -302,6 +303,7 @@ class Ensemble:
         pdfs = tuple(self._dev[l] for l in levels)
         for _ in range(coarse_steps):
             pdfs = fn(pdfs, coeffs)
+        # repro: host-ok(timing fence: advance latency is the serving metric)
         jax.block_until_ready(pdfs)
         for l, arr in zip(levels, pdfs):
             self._dev[l] = arr

@@ -1,0 +1,5 @@
+"""Control-plane module: excluded by config, its collectives are sanctioned."""
+
+
+def balance(comm, weights):
+    return comm.allgather(weights, 4)  # NEG-EXCLUDED: module is config-excluded

@@ -1,0 +1,13 @@
+"""Mini stepping module for the collective-free checker fixture."""
+
+from .support import helper_exchange
+
+
+def step(comm, values):
+    total = comm.allreduce(values, sum)  # TP-COLLECTIVE: collective on stepping path
+    return helper_exchange(comm, total)
+
+
+def sanctioned(comm, values):
+    # repro: collective-ok(fixture: documented startup-only reduction)
+    return comm.allgather(values, 8)  # NEG-ANNOTATED: allowlisted

@@ -1,0 +1,11 @@
+"""Annotation-hygiene fixture: an allowlist entry with no reason is itself a
+finding (never executed)."""
+
+import jax
+import numpy as np
+
+
+def undocumented_sanction(dev):
+    _ = jax
+    # repro: host-ok()
+    return np.asarray(dev)  # the empty reason above is flagged, the sync is not suppressed

@@ -1,0 +1,36 @@
+"""Seeded violations for the donation-safety checker (never executed)."""
+
+from repro.kernels.lbm_collide.ops import make_fused_superstep
+
+
+def use_after_donate(pdfs, cfg):
+    fn = make_fused_superstep(**cfg)
+    fn(pdfs)
+    return pdfs[0].sum()  # TP-DONATED: pdfs was consumed by the donating program
+
+
+def alias_after_donate(pdfs, cfg):
+    fn = make_fused_superstep(**cfg)
+    stash = pdfs
+    fn(pdfs)
+    return stash  # TP-ALIAS: stash aliases the donated buffer
+
+
+def attribute_stash(holder, pdfs, cfg):
+    fn = make_fused_superstep(**cfg)
+    holder.saved = pdfs
+    fn(pdfs)
+    return holder.saved  # TP-ATTR: attribute alias of the donated buffer
+
+
+def safe_rebind(pdfs, cfg):
+    fn = make_fused_superstep(**cfg)
+    pdfs = fn(pdfs)  # NEG-REBIND: the sanctioned ping-pong idiom
+    return pdfs
+
+
+def sanctioned_read(pdfs, cfg):
+    fn = make_fused_superstep(**cfg)
+    fn(pdfs)
+    # repro: donation-ok(fixture: cpu backend resolves donate off, buffer survives)
+    return pdfs  # NEG-ANNOTATED: allowlisted

@@ -1,0 +1,49 @@
+"""Seeded violations for the host-transfer checker (never executed)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bad_sync(dev):
+    return dev.mean().item()  # TP-ITEM: implicit d2h sync
+
+
+def bad_copy(dev):
+    return np.asarray(dev)  # TP-ASARRAY: implicit d2h transfer
+
+
+def bad_fence(dev):
+    jax.block_until_ready(dev)  # TP-FENCE: pipeline stall
+    return dev
+
+
+def sanctioned_sync(dev):
+    # repro: host-ok(fixture: documented copy-out contract)
+    return np.asarray(dev)  # NEG-ANNOTATED: allowlisted
+
+
+def host_only():
+    return np.asarray([1, 2, 3])  # NEG-HOSTVALUE: literal arg, no device source
+
+
+def traced_cast(x, scale):
+    return x * float(scale)  # TP-CAST: concretizes a traced param
+
+
+def traced_loop(x):
+    acc = 0.0
+    for v in x:  # TP-ITER: host iteration over a traced param
+        acc = acc + v
+    return acc
+
+
+def host_cast_ok(x):
+    q = 19
+    return x * float(q)  # NEG-CLOSURE: cast of a host local, not a param
+
+
+step = jax.jit(traced_cast)
+loop_step = jax.jit(traced_loop)
+ok_step = jax.jit(host_cast_ok)
+_ = jnp

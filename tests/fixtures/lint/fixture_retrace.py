@@ -1,0 +1,41 @@
+"""Seeded violations for the retrace static checker (never executed)."""
+
+import jax
+
+
+def jit_in_loop(fns, xs):
+    out = []
+    for f in fns:
+        prog = jax.jit(f)  # TP-LOOP: fresh cache entry per iteration
+        out.append(prog(xs))
+    return out
+
+
+def jit_lambda(x):
+    return jax.jit(lambda v: v * 2)(x)  # TP-LAMBDA: new function object per call
+
+
+def mutable_closure_factory(levels):
+    table = {}
+    for l in levels:
+        table[l] = l * 2
+
+    def stepper(x):  # TP-CLOSURE: traced body snapshots a mutated dict
+        return x + table[0]
+
+    return jax.jit(stepper)
+
+
+def float_static(x, omega=1.5):
+    return x * omega
+
+
+bad_static = jax.jit(float_static, static_argnums=1)  # TP-STATIC: float static arg
+
+
+def hoisted(fns, xs):
+    progs = []
+    for f in fns:
+        # repro: retrace-ok(fixture: bounded one-time build per factory call)
+        progs.append(jax.jit(f))  # NEG-ANNOTATED: allowlisted
+    return [p(xs) for p in progs]

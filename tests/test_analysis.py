@@ -1,0 +1,348 @@
+"""Tests for the invariant analyzer (``src/repro/analysis``).
+
+Three layers, mirroring how the analyzer is meant to be trusted:
+
+* fixture tests — each checker catches its seeded true-positive constructs in
+  ``tests/fixtures/lint/`` and stays silent on the allowlisted/benign
+  negatives sitting right next to them;
+* machinery tests — baseline roundtrip + loud staleness, annotation hygiene,
+  the retrace sentinel's trace counting, and the HLO transfer-op counter;
+* real-tree tests (tier-1 contract) — the full checker suite runs clean on
+  the repo against the committed baseline, and the halo-protocol verifier
+  proves the 1/4/13-rank sweep topologies without executing a step.
+"""
+
+import dataclasses
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    Finding,
+    LintConfig,
+    RetraceSentinel,
+    apply_baseline,
+    budget_findings,
+    build_sweep_topology,
+    line_hash,
+    load_baseline,
+    load_config,
+    rank_slot_map,
+    run,
+    sweep_topologies,
+    verify_compiled_rank_plan,
+    write_baseline,
+)
+from repro.analysis.astutil import ModuleCache
+from repro.analysis.checkers import (
+    annotation_findings,
+    check_collective,
+    check_donation,
+    check_host_transfer,
+    check_retrace,
+)
+from repro.launch.hlo_analysis import count_transfer_ops
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+FIXTURES = REPO_ROOT / "tests" / "fixtures" / "lint"
+
+
+def _lines(findings, path):
+    return sorted(f.line for f in findings if f.path == path)
+
+
+# -- fixture tests: one true-positive and one negative per checker -----------------
+
+
+def test_host_checker_catches_seeded_violations():
+    cfg = LintConfig(
+        repo_root=FIXTURES,
+        raw={"host_transfer": {"paths": ["fixture_host.py"]}},
+    )
+    findings = check_host_transfer(cfg, ModuleCache(FIXTURES))
+    # TP-ITEM 9, TP-ASARRAY 13, TP-FENCE 17, TP-CAST 31, TP-ITER 36
+    assert _lines(findings, "fixture_host.py") == [9, 13, 17, 31, 36]
+    # the annotated sync (23), the literal arg (27) and the host-local cast
+    # (44) must NOT be flagged — they are the sanctioned shapes
+    assert all(f.checker == "host" for f in findings)
+
+
+def test_donation_checker_catches_use_after_donate():
+    cfg = LintConfig(
+        repo_root=FIXTURES,
+        raw={
+            "donation": {
+                "paths": ["fixture_donation.py"],
+                "factories": ["make_fused_superstep"],
+            }
+        },
+    )
+    findings = check_donation(cfg, ModuleCache(FIXTURES))
+    # TP-DONATED 9 (direct read), TP-ALIAS 16 (alias read), TP-ATTR 23
+    # (attribute stash); the rebind (28) and annotated read (36) stay clean
+    assert _lines(findings, "fixture_donation.py") == [9, 16, 23]
+    assert "use-after-donate" in findings[0].message
+
+
+def test_retrace_checker_catches_unstable_patterns():
+    cfg = LintConfig(
+        repo_root=FIXTURES, raw={"retrace": {"paths": ["fixture_retrace.py"]}}
+    )
+    findings = check_retrace(cfg, ModuleCache(FIXTURES))
+    # TP-LOOP 9, TP-LAMBDA 15, TP-CLOSURE 23, TP-STATIC 33; the annotated
+    # loop build (40) is allowlisted
+    assert _lines(findings, "fixture_retrace.py") == [9, 15, 23, 33]
+
+
+def test_collective_checker_uses_import_reachability():
+    root = FIXTURES / "collective_tree"
+    cfg = LintConfig(
+        repo_root=root,
+        raw={
+            "collective": {
+                "stepping_modules": ["steppkg.stepping"],
+                "exclude": ["steppkg.control"],
+            }
+        },
+    )
+    findings = check_collective(cfg, ModuleCache(root))
+    by_path = {f.path: f for f in findings}
+    # TP-COLLECTIVE in the root module, TP-REACHABLE one import hop away
+    assert _lines(findings, "src/steppkg/stepping.py") == [7]
+    assert _lines(findings, "src/steppkg/support.py") == [5]
+    # the finding names the import chain back to the stepping root
+    assert "steppkg.support <- steppkg.stepping" in by_path["src/steppkg/support.py"].message
+    # annotated call (stepping.py:13) and config-excluded control.py stay clean
+    assert len(findings) == 2
+
+
+def test_annotation_checker_rejects_empty_reasons():
+    cfg = LintConfig(
+        repo_root=FIXTURES,
+        raw={
+            "host_transfer": {"paths": ["fixture_annotation.py"]},
+            "donation": {"paths": []},
+            "retrace": {"paths": []},
+        },
+    )
+    cache = ModuleCache(FIXTURES)
+    ann = annotation_findings(cfg, cache)
+    assert _lines(ann, "fixture_annotation.py") == [10]
+    assert ann[0].checker == "annotation"
+    # an empty-reason allowlist entry does NOT suppress the finding it covers
+    host = check_host_transfer(cfg, cache)
+    assert _lines(host, "fixture_annotation.py") == [11]
+
+
+# -- baseline machinery ------------------------------------------------------------
+
+
+def _finding_for(path: Path, rel: str, lineno: int) -> Finding:
+    text = path.read_text().splitlines()[lineno - 1]
+    return Finding(
+        checker="host",
+        severity="error",
+        path=rel,
+        line=lineno,
+        message="seeded",
+        fix_hint="",
+        line_hash=line_hash(text),
+    )
+
+
+def test_baseline_suppresses_then_fails_loudly_on_edit(tmp_path):
+    src = tmp_path / "mod.py"
+    src.write_text("x = 1\ny = dev.item()\n")
+    f = _finding_for(src, "mod.py", 2)
+    bl_path = tmp_path / "baseline.json"
+    write_baseline(bl_path, [f])
+    baseline = load_baseline(bl_path)
+    assert len(baseline) == 1
+
+    # matching finding is suppressed, nothing new, nothing stale
+    new, suppressed, stale = apply_baseline([f], baseline, tmp_path)
+    assert new == [] and len(suppressed) == 1 and stale == []
+
+    # line-shift with identical content still matches (hash is content-based)
+    src.write_text("x = 1\nz = 0\ny = dev.item()\n")
+    shifted = _finding_for(src, "mod.py", 3)
+    new, suppressed, stale = apply_baseline([shifted], baseline, tmp_path)
+    assert new == [] and stale == []
+
+    # editing the flagged line invalidates the entry LOUDLY
+    src.write_text("x = 1\ny = dev.mean().item()\n")
+    edited = _finding_for(src, "mod.py", 2)
+    new, suppressed, stale = apply_baseline([edited], baseline, tmp_path)
+    assert len(new) == 1  # the edited line is a fresh finding
+    assert len(stale) == 1 and "STALE" in stale[0]
+
+    # fixed finding (line intact, checker silent) is the other stale flavor
+    src.write_text("x = 1\ny = dev.item()\n")
+    new, suppressed, stale = apply_baseline([], baseline, tmp_path)
+    assert new == [] and len(stale) == 1 and "no longer fires" in stale[0]
+
+
+# -- retrace sentinel --------------------------------------------------------------
+
+
+def test_retrace_sentinel_counts_traces_and_restores_jit():
+    import jax
+    import jax.numpy as jnp
+
+    orig_jit = jax.jit
+
+    def double(x):
+        return x * 2
+
+    with RetraceSentinel() as s:
+        prog = jax.jit(double)
+        prog(jnp.ones((4,)))
+        prog(jnp.ones((4,)))  # cache hit: no retrace
+        prog(jnp.ones((8,)))  # new shape: one retrace
+    assert jax.jit is orig_jit  # patch removed on exit
+    assert s.total() == 2
+
+    assert budget_findings("unit", s.counts, 2) == []
+    over = budget_findings("unit", s.counts, 1)
+    assert len(over) == 1
+    assert "traced 2 times, budget is 1" in over[0].message
+
+
+def test_fused_engine_stays_within_compile_budget():
+    from repro.lbm import AMRLBM, LidDrivenCavityConfig
+
+    budget = load_config(REPO_ROOT).section("retrace")["budgets"]["fused"]
+    cfg = LidDrivenCavityConfig(
+        root_grid=(2, 2, 2),
+        cells_per_block=(8, 8, 8),
+        nranks=1,
+        omega=1.5,
+        u_lid=(0.08, 0.0, 0.0),
+        max_level=1,
+        refine_upper=0.03,
+        refine_lower=0.004,
+        stepping_mode="fused",
+    )
+    with RetraceSentinel() as s:
+        sim = AMRLBM(cfg)
+        sim.advance(2)  # same arena version: ONE program build
+        sim.adapt()  # refinement bumps the version
+        sim.advance(2)  # exactly one rebuild for the new forest
+    assert budget_findings("fused", s.counts, budget) == []
+    # traces scale with arena versions (2 here), never with steps
+    assert s.total() <= 2 * len(s.counts) + 2
+
+
+# -- HLO transfer-op counter -------------------------------------------------------
+
+
+def test_count_transfer_ops_flags_each_kind():
+    hlo = "\n".join(
+        [
+            "HloModule tampered",
+            "  %t = (f32[8], token[]) infeed(token[] %tok)",
+            "  %o = token[] outfeed(f32[8] %x, token[] %tok)",
+            '  %s = send(f32[8] %x, token[] %tok), is_host_transfer=true',
+            '  %r = recv(token[] %tok), is_host_transfer=true',
+            '  %c = custom-call(%x), custom_call_target="xla_ffi_python_cpu_callback"',
+            "  %p = f32[8]{0:S(5)} parameter(0)",
+        ]
+    )
+    counts = count_transfer_ops(hlo)
+    assert counts["infeed_outfeed"] == 2
+    assert counts["host_send_recv"] == 2
+    assert counts["host_callback"] == 1
+    assert counts["host_memory_space"] == 1
+    assert counts["total"] == 6
+
+
+def test_count_transfer_ops_clean_module():
+    hlo = "\n".join(
+        [
+            "HloModule clean",
+            "  %a = f32[8]{0} add(f32[8] %x, f32[8] %y)",
+            "  ROOT %t = (f32[8]) tuple(%a)",
+        ]
+    )
+    assert count_transfer_ops(hlo)["total"] == 0
+
+
+# -- halo-protocol verifier --------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def four_rank_plan():
+    from repro.lbm.grid import LBMBlockSpec, make_lbm_fields
+    from repro.lbm.halo import compile_rank_halo_plan
+
+    forest = build_sweep_topology(4)
+    spec = LBMBlockSpec(cells=(8, 8, 8), ghost=1)
+    registry = make_lbm_fields(spec)
+    rank_slots = rank_slot_map(forest)
+    plan = compile_rank_halo_plan(forest, registry, rank_slots, fields=("pdf", "mask"))
+    return forest, registry, plan, rank_slots
+
+
+def test_protocol_verifier_passes_intact_plan(four_rank_plan):
+    forest, registry, plan, rank_slots = four_rank_plan
+    assert plan.messages, "4-rank sweep topology must exchange halos"
+    assert verify_compiled_rank_plan(forest, registry, plan, rank_slots) == []
+
+
+def test_protocol_verifier_catches_dropped_message(four_rank_plan):
+    forest, registry, plan, rank_slots = four_rank_plan
+    tampered = dataclasses.replace(plan, messages=plan.messages[1:])
+    findings = verify_compiled_rank_plan(forest, registry, tampered, rank_slots)
+    assert any("orphan send" in f.message for f in findings)
+    assert any("coverage" in f.message or "ghost" in f.message for f in findings)
+
+
+def test_protocol_verifier_catches_byte_asymmetry(four_rank_plan):
+    forest, registry, plan, rank_slots = four_rank_plan
+    msgs = list(plan.messages)
+    msgs[0] = dataclasses.replace(msgs[0], nbytes=msgs[0].nbytes + 8)
+    tampered = dataclasses.replace(plan, messages=tuple(msgs))
+    findings = verify_compiled_rank_plan(forest, registry, tampered, rank_slots)
+    assert any("byte asymmetry" in f.message for f in findings)
+
+
+def test_protocol_verifier_catches_out_of_bounds_scatter(four_rank_plan):
+    forest, registry, plan, rank_slots = four_rank_plan
+    msgs = list(plan.messages)
+    m = msgs[0]
+    lvl, slot, cell, n = m.scatter[0]
+    bad = (lvl, slot, np.full_like(cell, 10**7), n)
+    msgs[0] = dataclasses.replace(m, scatter=(bad,) + m.scatter[1:])
+    tampered = dataclasses.replace(plan, messages=tuple(msgs))
+    findings = verify_compiled_rank_plan(forest, registry, tampered, rank_slots)
+    assert any("cell ids outside" in f.message for f in findings)
+
+
+def test_protocol_sweep_proves_1_4_13_rank_topologies():
+    # the acceptance sweep: every topology verified statically, including the
+    # compiled-vs-host per-pair byte cross-check (Table-1 mode independence),
+    # without executing a single step
+    assert sweep_topologies((1, 4, 13)) == []
+
+
+# -- real tree (tier-1 contract) ---------------------------------------------------
+
+
+def test_real_tree_is_clean_against_committed_baseline():
+    cfg = load_config(REPO_ROOT)
+    findings = run(cfg)
+    baseline = load_baseline(cfg.baseline_path)
+    new, suppressed, stale = apply_baseline(findings, baseline, REPO_ROOT)
+    assert new == [], "new lint findings:\n" + "\n".join(
+        f"  {f.path}:{f.line} [{f.checker}] {f.message}" for f in new
+    )
+    assert stale == [], "stale baseline entries:\n" + "\n".join(stale)
+
+
+def test_fixtures_are_never_scanned_by_the_real_tree_run():
+    cfg = load_config(REPO_ROOT)
+    cache = ModuleCache(REPO_ROOT)
+    for section in ("host_transfer", "donation", "retrace"):
+        paths = cache.files(cfg.section(section)["paths"])
+        assert not any("fixtures" in p.parts for p in paths), section

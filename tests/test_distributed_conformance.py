@@ -291,6 +291,13 @@ def test_fused_sharded_stepping_uses_only_p2p_next_neighbor_traffic():
         assert m.dst_rank in sim.forest.neighbor_ranks(m.src_rank)
         assert m.nbytes == host_plan.nbytes[(m.src_rank, m.dst_rank)]
 
+    # the static halo-protocol verifier proves the full contract on the same
+    # plan: pairwise-matched messages, byte symmetry, in-bounds indices,
+    # interior-only gathers, exact ghost-ring coverage
+    from repro.analysis import verify_compiled_rank_plan
+
+    assert verify_compiled_rank_plan(sim.forest, sim.fields, plan, rank_slots) == []
+
 
 def test_rank_arenas_partition_data_by_owner_across_amr():
     sim = AMRLBM(LidDrivenCavityConfig(nranks=4, stepping_mode="sharded", **BASE))

@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Lower the fused stepping program and analyze its compiled HLO.
+
+The IR-level complement of the source-level host-transfer lint: the source
+checker proves no *code path* syncs; this tool proves the compiled stepping
+program contains no transfer *ops* at all — no infeed/outfeed, no
+host-transfer send/recv, no host-callback custom-calls, no host-memory-space
+placements.
+
+Usage (from the repo root):
+
+    python tools/analyze_hlo.py                       # print HLO summary
+    python tools/analyze_hlo.py --assert-no-transfers # exit 1 on any transfer op
+    python tools/analyze_hlo.py --after-amr           # lower the post-AMR program too
+
+Builds the canonical lid-driven-cavity scenario (the same config the
+conformance tests and benchmarks run), grabs the fused engine's jitted
+superstep, lowers it with ``jax.jit``'s AOT API — no stepping required for
+the default program — and runs :func:`repro.launch.hlo_analysis.analyze_hlo`
+plus :func:`~repro.launch.hlo_analysis.count_transfer_ops` over the text.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+sys.path.insert(0, str(REPO_ROOT))
+
+
+def lowered_fused_hlo(*, after_amr: bool = False) -> str:
+    """Compiled HLO text of the fused superstep for the canonical scenario."""
+    from benchmarks.scenario import cavity_config
+    from repro.lbm import AMRLBM
+
+    sim = AMRLBM(cavity_config(nranks=1, stepping_mode="fused"))
+    if after_amr:
+        # develop refinement so the lowered program includes the level
+        # transitions (coalescence/explosion gathers) of the 2-level forest
+        sim.advance(1)
+        sim.adapt()
+    eng = sim.engine
+    fn, levels = eng._fused_program()
+    res = eng.arena.device()
+    pdfs = tuple(res.fetch(l, "pdf") for l in levels)
+    return fn.lower(pdfs).compile().as_text()
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--assert-no-transfers", action="store_true",
+        help="fail (exit 1) if the lowered stepping program contains any "
+        "host<->device transfer op",
+    )
+    ap.add_argument(
+        "--after-amr", action="store_true",
+        help="also lower the refined-forest program (slower: steps once and "
+        "runs an AMR cycle first)",
+    )
+    args = ap.parse_args(argv)
+
+    from repro.launch.hlo_analysis import analyze_hlo, count_transfer_ops
+
+    status = 0
+    variants = [("uniform", False)] + ([("after-amr", True)] if args.after_amr else [])
+    for label, after in variants:
+        text = lowered_fused_hlo(after_amr=after)
+        stats = analyze_hlo(text)
+        transfers = count_transfer_ops(text)
+        print(f"[{label}] computations={len(stats.computations)} "
+              f"collective_bytes={stats.collective_bytes_total:.0f} "
+              f"dot_flops={stats.dot_flops_total:.0f}")
+        print(f"[{label}] transfer ops: " + ", ".join(
+            f"{k}={v}" for k, v in transfers.items()))
+        if transfers["total"]:
+            status = 1
+            print(
+                f"[{label}] FAIL: fused stepping program contains "
+                f"{transfers['total']} host<->device transfer op(s) — the "
+                "zero-transfer-per-substep contract is broken",
+            )
+    if args.assert_no_transfers:
+        if status == 0:
+            print("OK: zero host<->device transfer ops in the fused stepping program")
+        return status
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""Invariant lint CLI: run the static checkers against the tree.
+
+Usage (from the repo root; src/ must be importable, e.g. PYTHONPATH=src):
+
+    python tools/repro_lint.py --all                 # all checkers + protocol sweep
+    python tools/repro_lint.py --checker host        # one source checker
+    python tools/repro_lint.py --protocol            # halo-protocol topology sweep
+    python tools/repro_lint.py --all --update-baseline
+
+Exit status is 0 iff there are no non-baselined findings and no stale
+baseline entries. Baseline entries are matched by (checker, path, content
+hash of the flagged line): editing a baselined line invalidates the entry
+and the lint fails loudly until it is re-audited (see
+``src/repro/analysis/findings.py``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.analysis import (  # noqa: E402
+    CHECKERS,
+    apply_baseline,
+    load_baseline,
+    load_config,
+    render,
+    run,
+    sweep_topologies,
+    write_baseline,
+)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--all", action="store_true", help="run every checker plus the protocol sweep")
+    ap.add_argument(
+        "--checker", action="append", choices=sorted(CHECKERS), default=[],
+        help="run one source checker (repeatable)",
+    )
+    ap.add_argument("--protocol", action="store_true", help="run the halo-protocol topology sweep")
+    ap.add_argument(
+        "--ranks", default=None,
+        help="comma-separated rank counts for the protocol sweep (default from pyproject)",
+    )
+    ap.add_argument(
+        "--update-baseline", action="store_true",
+        help="rewrite the baseline to the current findings (audit the diff!)",
+    )
+    ap.add_argument("--no-baseline", action="store_true", help="report raw findings, ignore the baseline")
+    ap.add_argument("--root", default=str(REPO_ROOT), help="repo root to lint")
+    args = ap.parse_args(argv)
+
+    root = Path(args.root).resolve()
+    cfg = load_config(root)
+
+    names = list(CHECKERS) if args.all else args.checker
+    if not names and not args.protocol and not args.all:
+        ap.error("pick --all, --checker NAME, or --protocol")
+
+    findings = run(cfg, names) if names else []
+    if args.all or args.protocol:
+        ranks = args.ranks or ",".join(str(r) for r in cfg.section("protocol")["ranks"])
+        findings += sweep_topologies(tuple(int(r) for r in ranks.split(",")))
+
+    if args.update_baseline:
+        write_baseline(cfg.baseline_path, findings)
+        print(f"baseline written: {cfg.baseline_path} ({len(findings)} entries)")
+        return 0
+
+    baseline = [] if args.no_baseline else load_baseline(cfg.baseline_path)
+    new, suppressed, stale = apply_baseline(findings, baseline, root)
+
+    for f in new:
+        print(render(f))
+    for msg in stale:
+        print(f"baseline: {msg}")
+    checker_names = sorted(set(names) | ({"protocol"} if (args.all or args.protocol) else set()))
+    print(
+        f"repro_lint: {len(new)} finding(s), {len(suppressed)} baselined, "
+        f"{len(stale)} stale baseline entr{'y' if len(stale) == 1 else 'ies'} "
+        f"[checkers: {', '.join(checker_names)}]"
+    )
+    return 1 if new or stale else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
