@@ -30,6 +30,9 @@ SCHEMA: dict[str, type | tuple[type, ...]] = {
     "nranks": int,
     "blocks_per_s": dict,
     "compile_s": dict,
+    # mode -> {halo/step/fused: seconds per coarse step of the timed region},
+    # derived from the telemetry-backed data_stats (see README Observability)
+    "stage_seconds_per_step": dict,
     "arena_speedup": (int, float),
     "fused_speedup": (int, float),
     "sharded_speedup": (int, float),
@@ -49,6 +52,16 @@ def _check_extra(i: int, entry: dict) -> list[str]:
         cs = entry.get("compile_s")
         if isinstance(cs, dict) and not isinstance(cs.get(mode), (int, float)):
             errs.append(f"entry {i}: compile_s[{mode!r}] missing or non-numeric")
+        ss = entry.get("stage_seconds_per_step")
+        if isinstance(ss, dict):
+            per_mode = ss.get(mode)
+            if not isinstance(per_mode, dict) or not all(
+                isinstance(v, (int, float)) and v >= 0 for v in per_mode.values()
+            ):
+                errs.append(
+                    f"entry {i}: stage_seconds_per_step[{mode!r}] missing or "
+                    "not a stage->seconds dict"
+                )
     return errs
 
 

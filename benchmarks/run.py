@@ -206,6 +206,7 @@ def stepping(
     best_of: int | None = None,
     ranks: tuple[int, ...] = (4,),
     steps: int | None = None,
+    trace: str | None = None,
 ) -> None:
     """Per-substep restacking (seed) vs persistent arena vs the device-
     resident fused superstep vs the rank-sharded data plane (host p2p and
@@ -216,30 +217,46 @@ def stepping(
     trajectories", guarded by benchmarks/check_stepping.py in CI).
 
     Single runs on a shared host are noise-bound (observed ~1.6x swings), so
-    every timing is best-of-``best_of`` (default 2 quick / 3 full)."""
+    every timing is best-of-``best_of`` (default 2 quick / 3 full).
+
+    With ``trace`` (a directory), telemetry is enabled for the timed region
+    and one Chrome-trace artifact per (mode, nranks) is written there —
+    render with ``tools/trace_report.py``. Tracing adds span overhead to the
+    timed loops, so traced timings are not comparable with untraced entries.
+    """
+    from pathlib import Path
+
+    from repro import telemetry
     from repro.lbm import AMRLBM
 
     from .scenario import cavity_config
 
+    if trace:
+        telemetry.configure(enabled=True)
     coarse = steps if steps is not None else (2 if quick else 4)
     k = best_of if best_of is not None else (2 if quick else 3)
     k = max(1, k)
     cells = (8, 8, 8) if quick else (16, 16, 16)
+    # per-coarse-step stage attribution of the timed region (halo / step /
+    # fused seconds from data_stats — exactly the spans, see telemetry docs)
+    data_stages = ("halo", "step", "fused")
     traj_entries = []
     # restack/arena/fused never consult Block.owner, so their timings are
     # rank-independent: measure them once and reuse across the sweep
-    baseline: dict[str, tuple[float, float, int, float]] = {}
+    baseline: dict[str, tuple[float, float, int, float, dict]] = {}
     rank_dependent = ("sharded", "fused_sharded")
     for nranks in ranks:
         results: dict[str, float] = {}
         halo_bytes: dict[str, int] = {}
         wall: dict[str, float] = {}
         compile_s: dict[str, float] = {}
+        stage_s: dict[str, dict[str, float]] = {}
         for mode in ("restack", "arena", "fused", "sharded", "fused_sharded"):
             if mode not in rank_dependent and mode in baseline:
-                results[mode], wall[mode], halo_bytes[mode], compile_s[mode] = (
-                    baseline[mode]
-                )
+                (
+                    results[mode], wall[mode], halo_bytes[mode],
+                    compile_s[mode], stage_s[mode],
+                ) = baseline[mode]
             else:
                 cfg = cavity_config(
                     nranks=nranks, stepping_mode=mode, cells_per_block=cells
@@ -262,7 +279,14 @@ def stepping(
                 # step are indistinguishable inside the per-rank programs)
                 stage = "fused" if mode == "fused_sharded" else "halo"
                 h0 = sim.data_stats[stage].p2p_bytes
+                sec0 = {st: sim.data_stats[st].seconds for st in data_stages}
+                if trace:
+                    telemetry.get_tracer().reset()  # one artifact per mode
                 dt = min(_timed(sim.advance, coarse) for _ in range(k))
+                if trace:
+                    telemetry.export.write_chrome_trace(
+                        Path(trace) / f"stepping_{mode}_n{nranks}.trace.json"
+                    )
                 results[mode] = coarse * work / dt
                 wall[mode] = dt
                 # normalized to one coarse step of the timed region, so
@@ -270,9 +294,17 @@ def stepping(
                 halo_bytes[mode] = (
                     sim.data_stats[stage].p2p_bytes - h0
                 ) // (k * coarse)
+                stage_s[mode] = {
+                    st: round(
+                        (sim.data_stats[st].seconds - sec0[st]) / (k * coarse), 6
+                    )
+                    for st in data_stages
+                    if sim.data_stats[st].seconds > sec0[st]
+                }
                 if mode not in rank_dependent:
                     baseline[mode] = (
-                        results[mode], wall[mode], halo_bytes[mode], compile_s[mode]
+                        results[mode], wall[mode], halo_bytes[mode],
+                        compile_s[mode], stage_s[mode],
                     )
             _csv(f"stepping/{mode}", f"n{nranks}_blocks_per_s", round(results[mode], 1))
             _csv(f"stepping/{mode}", f"n{nranks}_wall_s", round(wall[mode], 4))
@@ -296,6 +328,9 @@ def stepping(
                 "nranks": nranks,
                 "blocks_per_s": {m: round(v, 1) for m, v in results.items()},
                 "compile_s": {m: round(v, 4) for m, v in compile_s.items()},
+                # mode -> {halo/step/fused: seconds per coarse step of the
+                # timed region}; sums to ~wall/(best_of*coarse) per mode
+                "stage_seconds_per_step": dict(stage_s),
                 "arena_speedup": round(speedup, 3),
                 "fused_speedup": round(fused_rel, 3),
                 "sharded_speedup": round(sharded_rel, 3),
@@ -508,6 +543,11 @@ def main() -> None:
         "--steps", type=int, default=None,
         help="stepping: coarse steps per timed run (default 2 quick / 4 full)",
     )
+    ap.add_argument(
+        "--trace", type=str, default=None,
+        help="stepping: enable telemetry and write one Chrome-trace artifact "
+             "per (mode, nranks) into this directory",
+    )
     args = ap.parse_args()
     names = args.only or list(ALL)
     ranks = tuple(int(r) for r in args.ranks.split(",") if r)
@@ -516,7 +556,7 @@ def main() -> None:
         t0 = time.perf_counter()
         if name == "stepping":
             stepping(quick=args.quick, best_of=args.best_of, ranks=ranks,
-                     steps=args.steps)
+                     steps=args.steps, trace=args.trace)
         else:
             ALL[name](quick=args.quick)
         _csv(name, "bench_wall_s", round(time.perf_counter() - t0, 2))

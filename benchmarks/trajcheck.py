@@ -5,7 +5,11 @@ Each guarded trajectory (``BENCH_stepping.json``, ``BENCH_particles.json``,
 ``check_particles.py`` / ``check_serving.py``)
 that supplies its path, pinned entry schema, and any extra per-entry rules;
 the load/count/append/schema semantics live here exactly once, so the
-guards cannot drift apart. Protocol (see .github/workflows/ci.yml):
+guards cannot drift apart. Only entries appended after ``--prev-count`` are
+validated, so trajectories may gain schema keys over time (e.g. stepping's
+``stage_seconds_per_step`` per-stage breakdown, added with the telemetry
+layer) without invalidating legacy entries. Protocol (see
+.github/workflows/ci.yml):
 
     N=$(python -m benchmarks.check_<name> --count)
     python -m benchmarks.run --only <name> ...

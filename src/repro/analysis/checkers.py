@@ -279,6 +279,22 @@ class _DonationScan:
     def stmt(self, node: ast.stmt) -> None:
         if isinstance(node, _FUNC_DEFS):
             return  # nested defs get their own scan
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            # a with-block is straight-line code (no back edge), so the
+            # whole-subtree pre-scan below would be pure over-approximation:
+            # it kills on a donation anywhere in the body before the body's
+            # own rebinds can revive. Check only the context managers here,
+            # then visit the body in source order like any other suite.
+            for item in node.items:
+                consumed = self._donations(item.context_expr)
+                self._check_reads(item.context_expr, skip=consumed)
+                if item.optional_vars is not None:
+                    key = expr_key(item.optional_vars)
+                    if key:
+                        self._revive(key)
+            for sub in node.body:
+                self.stmt(sub)
+            return
         targets: list[ast.expr] = []
         value: ast.expr | None = None
         if isinstance(node, ast.Assign):

@@ -21,9 +21,12 @@ from __future__ import annotations
 
 import functools
 
+from ..telemetry import get_tracer
 from .findings import Finding
 
 __all__ = ["RetraceSentinel", "budget_findings"]
+
+_TR = get_tracer()
 
 
 class RetraceSentinel:
@@ -42,6 +45,9 @@ class RetraceSentinel:
         @functools.wraps(fun)
         def counting(*args, **kwargs):
             self.counts[name] = self.counts.get(name, 0) + 1
+            # a cache miss is the compile event the trace timeline shows:
+            # each trace lands on the compile track as an instant
+            _TR.instant(f"jit:{name}", cat="compile")
             return fun(*args, **kwargs)
 
         return counting

@@ -27,7 +27,11 @@ from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable
 
+from ..telemetry import BYTES_BUCKETS, get_tracer
+
 __all__ = ["CommStats", "Comm"]
+
+_TR = get_tracer()
 
 # Byte-size conventions for meta data (paper §2.4: "a few bytes of data").
 BYTES_BLOCK_ID = 8          # block identifier (paper: 4-8 bytes per block)
@@ -99,6 +103,12 @@ class Comm:
         self.stats.p2p_messages += 1
         self.stats.p2p_bytes += nbytes
         self.stats.sent_bytes_by_rank[src] += nbytes
+        if _TR.enabled:
+            _TR.metrics.counter("comm.p2p_bytes").inc(nbytes, src=src, dst=dst)
+            _TR.metrics.counter("comm.p2p_messages").inc(src=src, dst=dst)
+            _TR.metrics.histogram(
+                "comm.p2p_message_bytes", buckets=BYTES_BUCKETS
+            ).observe(nbytes)
 
     def exchange(self) -> dict[int, list[tuple[str, Any]]]:
         """Deliver all queued messages; one communication round (superstep)."""
@@ -125,6 +135,8 @@ class Comm:
         self.stats.allreduce_calls += 1
         self.stats.rounds += max(1, (self.nranks - 1).bit_length())
         self.stats.collective_bytes_per_rank += nbytes
+        if _TR.enabled:
+            _TR.metrics.counter("comm.collectives").inc(kind="allreduce")
         it = iter(per_rank_values)
         acc = next(it)
         for v in it:
@@ -140,6 +152,8 @@ class Comm:
         self.stats.allgather_calls += 1
         self.stats.rounds += max(1, (self.nranks - 1).bit_length())
         self.stats.collective_bytes_per_rank += nbytes_each * self.nranks
+        if _TR.enabled:
+            _TR.metrics.counter("comm.collectives").inc(kind="allgather")
         return list(per_rank_values)
 
     def barrier(self) -> None:

@@ -41,8 +41,11 @@ from typing import Any, Callable, Iterable
 
 import numpy as np
 
+from ..telemetry import get_tracer
 from .forest import Block, BlockForest
 from .migration import BlockDataItem, BlockDataRegistry
+
+_TR = get_tracer()
 
 __all__ = [
     "FieldSpec",
@@ -493,6 +496,11 @@ class DeviceResidency:
             self._dev[key] = arr
             self.h2d_transfers += 1
             self.h2d_bytes += host.nbytes
+            if _TR.enabled:
+                _TR.instant(
+                    "h2d", cat="residency", rank=self.arena.rank or 0,
+                    level=level, field=name, bytes=host.nbytes,
+                )
         return arr
 
     def store(self, level: int, name: str, value) -> None:
@@ -573,6 +581,11 @@ class DeviceResidency:
             np.copyto(host, np.asarray(self._dev[key]))
             self.d2h_transfers += 1
             self.d2h_bytes += host.nbytes
+            if _TR.enabled:
+                _TR.instant(
+                    "d2h", cat="residency", rank=self.arena.rank or 0,
+                    level=level, field=name, bytes=host.nbytes,
+                )
         self._dev_newer.clear()
 
 

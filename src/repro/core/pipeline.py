@@ -13,16 +13,18 @@ can attribute cost to stages exactly like the paper's Figures 8-13.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
+from ..telemetry import get_tracer
 from .balancing.base import Balancer
 from .comm import Comm
 from .forest import Block, BlockForest
 from .migration import BlockDataRegistry, migrate_data
 from .proxy import ProxyWeightFn, build_proxy, migrate_proxy_blocks
 from .refine import MarkCallback, mark_and_balance_targets
+
+_TR = get_tracer()
 
 __all__ = ["AMRPipeline", "CycleReport", "BlockWeightFn", "recompute_weights"]
 
@@ -126,11 +128,11 @@ class AMRPipeline:
                 recompute_weights(current, self.block_weight_fn)
 
             # ---- step 1: block-level refinement (+ 2:1) ---------------------
-            t0 = time.perf_counter()
             s0 = comm.stats.summary()
-            changed, ghost = mark_and_balance_targets(current, comm, mark_fn)
+            with _TR.stage("refine", cat="amr", cycle=_cycle) as sp:
+                changed, ghost = mark_and_balance_targets(current, comm, mark_fn)
             report.stages["refine"] = StageStats.delta(
-                s0, comm.stats.summary(), time.perf_counter() - t0
+                s0, comm.stats.summary(), sp.seconds
             )
             report.levels_changed |= changed
             if not changed and not force_rebalance:
@@ -139,36 +141,37 @@ class AMRPipeline:
             report.executed = True
 
             # ---- step 2: proxy data structure --------------------------------
-            t0 = time.perf_counter()
             s0 = comm.stats.summary()
-            proxy = build_proxy(current, comm, ghost, self.weight_fn)
+            with _TR.stage("proxy", cat="amr", cycle=_cycle) as sp:
+                proxy = build_proxy(current, comm, ghost, self.weight_fn)
             report.stages["proxy"] = StageStats.delta(
-                s0, comm.stats.summary(), time.perf_counter() - t0
+                s0, comm.stats.summary(), sp.seconds
             )
 
             # ---- step 3: dynamic load balancing (iterative) -------------------
-            t0 = time.perf_counter()
             s0 = comm.stats.summary()
-            iteration = 0
-            while True:
-                assignments, again = self.balancer(proxy, comm, iteration)
-                report.proxy_blocks_moved += migrate_proxy_blocks(
-                    proxy, current, comm, assignments
-                )
-                iteration += 1
-                if not again:
-                    break
+            with _TR.stage("balance", cat="amr", cycle=_cycle) as sp:
+                iteration = 0
+                while True:
+                    assignments, again = self.balancer(proxy, comm, iteration)
+                    report.proxy_blocks_moved += migrate_proxy_blocks(
+                        proxy, current, comm, assignments
+                    )
+                    iteration += 1
+                    if not again:
+                        break
+                sp.set(iterations=iteration)
             report.main_iterations += iteration
             report.stages["balance"] = StageStats.delta(
-                s0, comm.stats.summary(), time.perf_counter() - t0
+                s0, comm.stats.summary(), sp.seconds
             )
 
             # ---- step 4: data migration + refine/coarsen ----------------------
-            t0 = time.perf_counter()
             s0 = comm.stats.summary()
-            current = migrate_data(current, proxy, comm, self.registry)
+            with _TR.stage("migrate", cat="amr", cycle=_cycle) as sp:
+                current = migrate_data(current, proxy, comm, self.registry)
             report.stages["migrate"] = StageStats.delta(
-                s0, comm.stats.summary(), time.perf_counter() - t0
+                s0, comm.stats.summary(), sp.seconds
             )
             # proxy is destroyed here (temporary structure, paper Fig. 6)
             del proxy

@@ -46,7 +46,6 @@ feeds the balancer through the pipeline's weight hooks.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import Callable
 
@@ -63,6 +62,7 @@ from ..core import (
 )
 from ..core.forest import Block, BlockForest
 from ..core.pipeline import StageStats
+from ..telemetry import get_tracer
 from ..particles import (
     ParticlesConfig,
     advect_block_batch,
@@ -79,6 +79,8 @@ from .grid import CellType, LBMBlockSpec, block_world_box, make_lbm_fields
 from .lattice import D3Q19
 
 __all__ = ["LidDrivenCavityConfig", "AMRLBM"]
+
+_TR = get_tracer()
 
 
 @dataclass
@@ -293,34 +295,32 @@ class AMRLBM:
         # 0 before any device read — so this host-side write needs no
         # residency drop.
         self.engine.exchange_ghosts()
-        t0 = time.perf_counter()
         s0 = self.comm.stats.summary()
-        advected = 0
-        for level in self.forest.levels_in_use():
-            for pdf, mask, slots, blocks in self.engine.particle_batches(level):
-                advected += advect_block_batch(
-                    pdf,
-                    mask,
-                    self.spec.lattice,
-                    self.geom,
-                    blocks,
-                    slots,
-                    level=level,
-                    cells=self.spec.cells,
-                    ghost=self.spec.ghost,
-                )
-        moved, _cross_bytes = redistribute_particles(
-            self.forest,
-            self.geom,
-            self.comm,
-            boundary=self.cfg.particles.boundary,
-        )
+        with _TR.stage("particles", cat="stage") as sp:
+            advected = 0
+            for level in self.forest.levels_in_use():
+                for pdf, mask, slots, blocks in self.engine.particle_batches(level):
+                    advected += advect_block_batch(
+                        pdf,
+                        mask,
+                        self.spec.lattice,
+                        self.geom,
+                        blocks,
+                        slots,
+                        level=level,
+                        cells=self.spec.cells,
+                        ghost=self.spec.ghost,
+                    )
+            moved, _cross_bytes = redistribute_particles(
+                self.forest,
+                self.geom,
+                self.comm,
+                boundary=self.cfg.particles.boundary,
+            )
         self.particles_advected += advected
         self.particles_moved += moved
         self.data_stats["particles"].add(
-            StageStats.delta(
-                s0, self.comm.stats.summary(), time.perf_counter() - t0
-            )
+            StageStats.delta(s0, self.comm.stats.summary(), sp.seconds)
         )
 
     def advance(self, coarse_steps: int = 1) -> None:
@@ -344,6 +344,10 @@ class AMRLBM:
         )
         if report.executed:
             self.amr_cycles += 1
+            _TR.instant(
+                "amr.event", cat="amr", cycle=self.amr_cycles,
+                blocks=self.forest.num_blocks(),
+            )
             self.engine.adopt(self.forest)  # repack/rebuild storage, rebind views
             self.engine.sync_caches()
             self.refresh_masks()

@@ -39,7 +39,6 @@ substep programs, with host contact only at AMR events.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Callable
 
@@ -49,6 +48,7 @@ import numpy as np
 
 from ..core import LevelArena, RankArenas
 from ..core.pipeline import StageStats
+from ..telemetry import get_tracer
 from ..kernels.lbm_collide.ops import (
     boundary_slot_sets,
     make_arena_stream_collide,
@@ -74,6 +74,8 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 __all__ = ["StepEngine", "ENGINES", "make_engine"]
 
 ENGINES: dict[str, type["StepEngine"]] = {}
+
+_TR = get_tracer()
 
 
 def make_engine(sim: "AMRLBM") -> "StepEngine":
@@ -193,16 +195,16 @@ class StepEngine:
         # storage change), so the plan-cache guard is an O(1) token compare
         # instead of the default O(blocks) binding scan
         token = self.storage_version() if self._halo_plans is not None else None
-        t0 = time.perf_counter()
-        fill_ghost_layers(
-            self.sim.forest,
-            self.sim.fields,
-            fields=("pdf",),
-            levels=active,
-            plan_cache=self._halo_plans,
-            cache_token=token,
-        )
-        self.sim.data_stats["halo"].add(StageStats(seconds=time.perf_counter() - t0))
+        with _TR.stage("halo", cat="stage") as sp:
+            fill_ghost_layers(
+                self.sim.forest,
+                self.sim.fields,
+                fields=("pdf",),
+                levels=active,
+                plan_cache=self._halo_plans,
+                cache_token=token,
+            )
+        self.sim.data_stats["halo"].add(StageStats(seconds=sp.seconds))
 
     # -- stepping --------------------------------------------------------------
     def advance(self, coarse_steps: int) -> None:
@@ -215,12 +217,10 @@ class StepEngine:
             for s in range(2**lmax):
                 active = {l for l in levels if s % (2 ** (lmax - l)) == 0}
                 self.exchange_ghosts(active)
-                t0 = time.perf_counter()
-                for l in sorted(active, reverse=True):
-                    self.step_level(l)
-                sim.data_stats["step"].add(
-                    StageStats(seconds=time.perf_counter() - t0)
-                )
+                with _TR.stage("step", cat="stage") as sp:
+                    for l in sorted(active, reverse=True):
+                        self.step_level(l)
+                sim.data_stats["step"].add(StageStats(seconds=sp.seconds))
 
     def step_level(self, level: int) -> None:  # pragma: no cover - abstract
         raise NotImplementedError
@@ -336,29 +336,31 @@ class FusedEngine(ArenaEngine):
         key = (self.arena.version, levels)
         if self._fused_fn is not None and self._fused_key == key:
             return self._fused_fn, levels
-        lmax = levels[-1]
-        slots = {l: self.arena.slots(l) for l in levels}
-        plans = {
-            p: compile_ghost_plan(
-                forest,
-                self.sim.fields,
-                slots,
-                fields=("pdf",),
-                levels={l for l in levels if l >= lmax - p},
+        with _TR.span("build:fused_superstep", cat="compile",
+                      version=self.arena.version):
+            lmax = levels[-1]
+            slots = {l: self.arena.slots(l) for l in levels}
+            plans = {
+                p: compile_ghost_plan(
+                    forest,
+                    self.sim.fields,
+                    slots,
+                    fields=("pdf",),
+                    levels={l for l in levels if l >= lmax - p},
+                )
+                for p in range(lmax + 1)
+            }
+            res = self.arena.device()
+            # repro: host-ok(mask copy at program build, once per arena version)
+            masks_host = {l: np.array(self.arena.buffer(l, "mask")) for l in levels}
+            self._fused_fn = make_fused_superstep(
+                levels=levels,
+                plans=plans,
+                steppers={l: self._fused_stepper(l) for l in levels},
+                masks={l: res.fetch(l, "mask") for l in levels},
+                donate=getattr(self.cfg, "donate_pdfs", None),
+                halo_stepper_factory=self._halo_stepper_factory(masks_host),
             )
-            for p in range(lmax + 1)
-        }
-        res = self.arena.device()
-        # repro: host-ok(mask copy at program build, once per arena version)
-        masks_host = {l: np.array(self.arena.buffer(l, "mask")) for l in levels}
-        self._fused_fn = make_fused_superstep(
-            levels=levels,
-            plans=plans,
-            steppers={l: self._fused_stepper(l) for l in levels},
-            masks={l: res.fetch(l, "mask") for l in levels},
-            donate=getattr(self.cfg, "donate_pdfs", None),
-            halo_stepper_factory=self._halo_stepper_factory(masks_host),
-        )
         self._fused_key = key
         return self._fused_fn, levels
 
@@ -373,18 +375,15 @@ class FusedEngine(ArenaEngine):
         res = self.arena.device()
         pdfs = tuple(res.fetch(l, "pdf") for l in levels)
         nsub = 1 << levels[-1]
-        t0 = time.perf_counter()
-        for _ in range(coarse_steps):
-            pdfs = fn(pdfs)
-        # repro: host-ok(timing fence: StageStats seconds must not hide queued device work)
-        jax.block_until_ready(pdfs)
-        for l, arr in zip(levels, pdfs):
-            res.store(l, "pdf", arr)
+        with _TR.stage("fused", cat="stage", coarse_steps=coarse_steps) as sp:
+            for _ in range(coarse_steps):
+                pdfs = fn(pdfs)
+            # repro: host-ok(timing fence: StageStats seconds must not hide queued device work)
+            jax.block_until_ready(pdfs)
+            for l, arr in zip(levels, pdfs):
+                res.store(l, "pdf", arr)
         self.sim.data_stats["fused"].add(
-            StageStats(
-                seconds=time.perf_counter() - t0,
-                exchange_rounds=coarse_steps * nsub,
-            )
+            StageStats(seconds=sp.seconds, exchange_rounds=coarse_steps * nsub)
         )
 
 
@@ -413,20 +412,20 @@ class ShardedEngine(StepEngine):
     def exchange_ghosts(self, active: set[int] | None = None) -> None:
         self.sync_caches()
         token = self.storage_version()
-        t0 = time.perf_counter()
         comm = self.sim.comm
         s0 = comm.stats.summary()
-        fill_ghost_layers_sharded(
-            self.sim.forest,
-            self.sim.fields,
-            comm,
-            fields=("pdf",),
-            levels=active,
-            plan_cache=self._halo_plans,
-            cache_token=token,
-        )
+        with _TR.stage("halo", cat="stage") as sp:
+            fill_ghost_layers_sharded(
+                self.sim.forest,
+                self.sim.fields,
+                comm,
+                fields=("pdf",),
+                levels=active,
+                plan_cache=self._halo_plans,
+                cache_token=token,
+            )
         self.sim.data_stats["halo"].add(
-            StageStats.delta(s0, comm.stats.summary(), time.perf_counter() - t0)
+            StageStats.delta(s0, comm.stats.summary(), sp.seconds)
         )
 
     def step_level(self, level: int) -> None:
@@ -532,6 +531,14 @@ class FusedShardedEngine(ShardedEngine):
         key = (self.arenas.version, levels)
         if self._programs_cache is not None and self._programs_key == key:
             return self._programs_cache
+        with _TR.span("build:rank_programs", cat="compile",
+                      version=self.arenas.version):
+            self._programs_cache = self._build_programs(forest, levels)
+        self._programs_key = key
+        return self._programs_cache
+
+    def _build_programs(self, forest: "BlockForest",
+                        levels: tuple[int, ...]) -> _RankPrograms:
         lmax = levels[-1]
         nsub = 1 << lmax
         per_rank = self.arenas.per_rank
@@ -628,8 +635,6 @@ class FusedShardedEngine(ShardedEngine):
                         donate=getattr(self.cfg, "donate_pdfs", None),
                         halo_stepper_factory=self._halo_stepper_factory(masks_host),
                     )
-        self._programs_cache = progs
-        self._programs_key = key
         return progs
 
     def advance(self, coarse_steps: int) -> None:
@@ -654,48 +659,67 @@ class FusedShardedEngine(ShardedEngine):
             r: tuple(res[r].fetch(l, "pdf") for l in progs.rank_levels[r])
             for r in progs.ranks
         }
-        t0 = time.perf_counter()
         s0 = comm.stats.summary()
-        for _ in range(coarse_steps):
-            for s in range(progs.nsub):
-                p = progs.pattern[s]
-                payloads = []
-                for r in progs.ranks:
-                    emit = progs.emits[p].get(r)
-                    if emit is not None:
-                        payloads.append((r, emit(pdfs[r])))
-                for r in progs.ranks:
-                    interior = progs.interiors[p].get(r)
-                    if interior is not None:
-                        pdfs[r] = interior(pdfs[r])
-                for r, arrs in payloads:
-                    for m, arr in zip(progs.sends[p][r], arrs):
-                        comm.send(
-                            m.src_rank, m.dst_rank, "halo", (m.key, arr),
-                            nbytes=m.nbytes,
-                        )
-                by_key = {}
-                if progs.has_messages[p]:
-                    for _dst, msgs in comm.exchange().items():
-                        for _tag, (mkey, arr) in msgs:
-                            by_key[mkey] = arr
-                for r in progs.ranks:
-                    boundary = progs.boundaries[p].get(r)
-                    if boundary is not None:
-                        msgs = tuple(by_key[m.key] for m in progs.recvs[p][r])
-                        pdfs[r] = boundary(pdfs[r], msgs)
-                        continue
-                    absorb = progs.absorbs[p].get(r)
-                    if absorb is None:  # rank is idle in this pattern
-                        continue
-                    msgs = tuple(by_key[m.key] for m in progs.recvs[p][r])
-                    pdfs[r] = absorb(pdfs[r], msgs)
-        # repro: host-ok(timing fence: StageStats seconds must not hide queued device work)
-        jax.block_until_ready([pdfs[r] for r in progs.ranks])
-        for r in progs.ranks:
-            for l, arr in zip(progs.rank_levels[r], pdfs[r]):
-                res[r].store(l, "pdf", arr)
-        stage = StageStats.delta(s0, comm.stats.summary(), time.perf_counter() - t0)
+        with _TR.stage("fused", cat="stage", coarse_steps=coarse_steps) as st:
+            for _ in range(coarse_steps):
+                for s in range(progs.nsub):
+                    p = progs.pattern[s]
+                    # the route span's `overlapped` flag marks whether this
+                    # pattern dispatched interior programs before routing —
+                    # the quantity trace_report's overlap efficiency reads
+                    overlapped = bool(progs.interiors[p])
+                    payloads = []
+                    for r in progs.ranks:
+                        emit = progs.emits[p].get(r)
+                        if emit is not None:
+                            with _TR.span("emit", cat="substep", rank=r,
+                                          substep=s, pattern=p):
+                                payloads.append((r, emit(pdfs[r])))
+                    for r in progs.ranks:
+                        interior = progs.interiors[p].get(r)
+                        if interior is not None:
+                            with _TR.span("interior", cat="substep", rank=r,
+                                          substep=s, pattern=p):
+                                pdfs[r] = interior(pdfs[r])
+                    with _TR.span("route", cat="substep", substep=s,
+                                  pattern=p, overlapped=overlapped) as rt:
+                        nbytes = 0
+                        for r, arrs in payloads:
+                            for m, arr in zip(progs.sends[p][r], arrs):
+                                comm.send(
+                                    m.src_rank, m.dst_rank, "halo",
+                                    (m.key, arr), nbytes=m.nbytes,
+                                )
+                                nbytes += m.nbytes
+                        by_key = {}
+                        if progs.has_messages[p]:
+                            for _dst, msgs in comm.exchange().items():
+                                for _tag, (mkey, arr) in msgs:
+                                    by_key[mkey] = arr
+                        rt.set(bytes=nbytes)
+                    for r in progs.ranks:
+                        boundary = progs.boundaries[p].get(r)
+                        if boundary is not None:
+                            with _TR.span("absorb", cat="substep", rank=r,
+                                          substep=s, pattern=p, split=True):
+                                msgs = tuple(
+                                    by_key[m.key] for m in progs.recvs[p][r]
+                                )
+                                pdfs[r] = boundary(pdfs[r], msgs)
+                            continue
+                        absorb = progs.absorbs[p].get(r)
+                        if absorb is None:  # rank is idle in this pattern
+                            continue
+                        with _TR.span("absorb", cat="substep", rank=r,
+                                      substep=s, pattern=p, split=False):
+                            msgs = tuple(by_key[m.key] for m in progs.recvs[p][r])
+                            pdfs[r] = absorb(pdfs[r], msgs)
+            # repro: host-ok(timing fence: StageStats seconds must not hide queued device work)
+            jax.block_until_ready([pdfs[r] for r in progs.ranks])
+            for r in progs.ranks:
+                for l, arr in zip(progs.rank_levels[r], pdfs[r]):
+                    res[r].store(l, "pdf", arr)
+        stage = StageStats.delta(s0, comm.stats.summary(), st.seconds)
         # report in-program exchange rounds with the same meaning as the
         # fused engine (one logical ghost-exchange round per substep) rather
         # than the Comm superstep count the delta carries — the latter is 0

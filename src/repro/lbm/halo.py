@@ -33,7 +33,30 @@ from ..core.blockid import ForestGeometry
 from ..core.comm import Comm
 from ..core.fields import FieldRegistry
 from ..core.forest import Block, BlockForest
+from ..telemetry import get_tracer
 from .grid import LBMBlockSpec
+
+_TR = get_tracer()
+
+
+def _traced_plan(name: str):
+    """Record plan build/compile work as a ``halo.plan`` span (these run at
+    adoption and AMR events, never per substep — the span makes replanning
+    cost visible next to the compile events it usually precedes)."""
+
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            if not _TR.enabled:
+                return fn(*args, **kwargs)
+            with _TR.span(name, cat="halo.plan"):
+                return fn(*args, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__wrapped__ = fn
+        return wrapper
+
+    return deco
 
 __all__ = [
     "fill_ghost_layers",
@@ -157,6 +180,7 @@ def _field_groups(
     return [(spec, tuple(fields))]
 
 
+@_traced_plan("build_ghost_plan")
 def build_ghost_plan(
     forest: BlockForest,
     spec: LBMBlockSpec | FieldRegistry,
@@ -413,6 +437,7 @@ def _lower_region_cells(
     return tgt_cell, src_cell
 
 
+@_traced_plan("compile_ghost_plan")
 def compile_ghost_plan(
     forest: BlockForest,
     spec: LBMBlockSpec | FieldRegistry,
@@ -589,6 +614,7 @@ class RankHaloPlan:
         return sum(self.nbytes.values())
 
 
+@_traced_plan("build_rank_halo_plan")
 def build_rank_halo_plan(
     forest: BlockForest,
     spec: LBMBlockSpec | FieldRegistry,
@@ -773,6 +799,7 @@ class CompiledRankHaloPlan:
         return sum(m.nbytes for m in self.messages)
 
 
+@_traced_plan("compile_rank_halo_plan")
 def compile_rank_halo_plan(
     forest: BlockForest,
     spec: LBMBlockSpec | FieldRegistry,

@@ -28,7 +28,6 @@ e.g. ``repro.train.data.diffusion_assign_buckets``).
 from __future__ import annotations
 
 import dataclasses
-import time
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import TYPE_CHECKING, Callable
@@ -42,6 +41,9 @@ from ..core.checkpoint import (
     snapshot_payloads,
 )
 from ..core.comm import Comm
+from ..telemetry import get_tracer
+
+_TR = get_tracer()
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from ..lbm.driver import AMRLBM
@@ -94,46 +96,48 @@ def resize_ranks(
     """
     from ..lbm.engines import make_engine  # local: avoid serving<->lbm cycle
 
-    t0 = time.perf_counter()
     old_nranks = sim.cfg.nranks
-    sim.materialize_host()  # codec reads host views
-    if checkpoint_dir is not None:
-        save_checkpoint(sim.forest, sim.registry, checkpoint_dir)
-        forest = load_checkpoint(checkpoint_dir, sim.registry, new_nranks)
-    else:
-        entries = [
-            {"bid": b.bid, "level": b.level, "weight": b.weight}
-            for b in sim.forest.all_blocks()
-        ]
-        payloads = snapshot_payloads(sim.forest, sim.registry)
-        forest = rebuild_forest(
-            sim.geom, entries, payloads, sim.registry, new_nranks
-        )
-    sim.cfg = dataclasses.replace(sim.cfg, nranks=new_nranks)
-    sim.comm = Comm(new_nranks)
-    sim.forest = forest
-    # fresh engine: per-rank storage is sized by cfg.nranks at construction,
-    # so rebuilding it is the rebind (mask travels through the codec — no
-    # refresh needed, and the restored pdf ghosts stay exactly as serialized)
-    sim.engine = make_engine(sim)
-    sim.engine.adopt(sim.forest)
-    sim.engine.sync_caches()
-    rebalanced = False
-    if rebalance and new_nranks > 1:
-        sim.forest, report = sim.pipeline.run_cycle(
-            sim.forest, sim.comm, None, force_rebalance=True
-        )
-        if report.executed:
-            rebalanced = True
-            sim.engine.adopt(sim.forest)
-            sim.engine.sync_caches()
+    with _TR.stage("resize", cat="serving", old=old_nranks,
+                   new=new_nranks) as sp:
+        sim.materialize_host()  # codec reads host views
+        if checkpoint_dir is not None:
+            save_checkpoint(sim.forest, sim.registry, checkpoint_dir)
+            forest = load_checkpoint(checkpoint_dir, sim.registry, new_nranks)
+        else:
+            entries = [
+                {"bid": b.bid, "level": b.level, "weight": b.weight}
+                for b in sim.forest.all_blocks()
+            ]
+            payloads = snapshot_payloads(sim.forest, sim.registry)
+            forest = rebuild_forest(
+                sim.geom, entries, payloads, sim.registry, new_nranks
+            )
+        sim.cfg = dataclasses.replace(sim.cfg, nranks=new_nranks)
+        sim.comm = Comm(new_nranks)
+        sim.forest = forest
+        # fresh engine: per-rank storage is sized by cfg.nranks at
+        # construction, so rebuilding it is the rebind (mask travels through
+        # the codec — no refresh needed, and the restored pdf ghosts stay
+        # exactly as serialized)
+        sim.engine = make_engine(sim)
+        sim.engine.adopt(sim.forest)
+        sim.engine.sync_caches()
+        rebalanced = False
+        if rebalance and new_nranks > 1:
+            sim.forest, report = sim.pipeline.run_cycle(
+                sim.forest, sim.comm, None, force_rebalance=True
+            )
+            if report.executed:
+                rebalanced = True
+                sim.engine.adopt(sim.forest)
+                sim.engine.sync_caches()
     return ResizeReport(
         old_nranks=old_nranks,
         new_nranks=new_nranks,
         nblocks=len(list(sim.forest.all_blocks())),
         via_disk=checkpoint_dir is not None,
         rebalanced=rebalanced,
-        seconds=time.perf_counter() - t0,
+        seconds=sp.seconds,
     )
 
 

@@ -29,7 +29,6 @@ same :class:`EnsembleProgramCache`.
 
 from __future__ import annotations
 
-import time
 from typing import TYPE_CHECKING, Callable
 
 import jax
@@ -37,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.pipeline import StageStats
+from ..telemetry import get_tracer
 from ..kernels.lbm_collide.ops import make_ensemble_superstep, resolve_donate
 from ..kernels.lbm_collide.ref import collision_coeffs
 from ..lbm.halo import compile_ghost_plan
@@ -53,6 +53,8 @@ __all__ = [
     "is_batchable",
     "topology_key",
 ]
+
+_TR = get_tracer()
 
 
 def topology_key(forest: "BlockForest") -> tuple[tuple[int, int], ...]:
@@ -200,33 +202,40 @@ class Ensemble:
         key = (self.compat, self.topology(), levels)
 
         def build() -> Callable:
-            lmax = levels[-1]
-            slots = {l: arena.slots(l) for l in levels}
-            plans = {
-                p: compile_ghost_plan(
-                    m0.forest,
-                    m0.fields,
-                    slots,
-                    fields=("pdf",),
-                    levels={l for l in levels if l >= lmax - p},
-                )
-                for p in range(lmax + 1)
-            }
-            masks = {l: arena.buffer(l, "mask") for l in levels}
-            for m in self.members[1:]:  # shared-mask precondition
-                for l in levels:
-                    assert np.array_equal(
-                        m.engine.arena.buffer(l, "mask"), masks[l]
-                    ), "ensemble members must share cell-type masks"
-            return make_ensemble_superstep(
-                levels=levels,
-                plans=plans,
-                masks=masks,
-                lattice=m0.spec.lattice,
-                collision=m0.cfg.collision,
-            )
+            with _TR.span("build:ensemble_superstep", cat="compile",
+                          members=len(self.members)):
+                return self._build_program(levels)
 
         return self.programs.get_or_build(key, build), levels
+
+    def _build_program(self, levels: tuple[int, ...]) -> Callable:
+        m0 = self.members[0]
+        arena = m0.engine.arena
+        lmax = levels[-1]
+        slots = {l: arena.slots(l) for l in levels}
+        plans = {
+            p: compile_ghost_plan(
+                m0.forest,
+                m0.fields,
+                slots,
+                fields=("pdf",),
+                levels={l for l in levels if l >= lmax - p},
+            )
+            for p in range(lmax + 1)
+        }
+        masks = {l: arena.buffer(l, "mask") for l in levels}
+        for m in self.members[1:]:  # shared-mask precondition
+            for l in levels:
+                assert np.array_equal(
+                    m.engine.arena.buffer(l, "mask"), masks[l]
+                ), "ensemble members must share cell-type masks"
+        return make_ensemble_superstep(
+            levels=levels,
+            plans=plans,
+            masks=masks,
+            lattice=m0.spec.lattice,
+            collision=m0.cfg.collision,
+        )
 
     def _member_coeffs(self, levels: tuple[int, ...]) -> dict:
         """level -> stacked per-member collision coefficients (leading M)."""
@@ -297,21 +306,23 @@ class Ensemble:
         if coarse_steps <= 0:
             return
         fn, levels = self._program()
-        t0 = time.perf_counter()
-        self._fetch(levels)
-        coeffs = self._member_coeffs(levels)
-        pdfs = tuple(self._dev[l] for l in levels)
-        for _ in range(coarse_steps):
-            pdfs = fn(pdfs, coeffs)
-        # repro: host-ok(timing fence: advance latency is the serving metric)
-        jax.block_until_ready(pdfs)
-        for l, arr in zip(levels, pdfs):
-            self._dev[l] = arr
+        with _TR.stage("ensemble.advance", cat="serving",
+                       members=len(self.members),
+                       coarse_steps=coarse_steps) as sp:
+            self._fetch(levels)
+            coeffs = self._member_coeffs(levels)
+            pdfs = tuple(self._dev[l] for l in levels)
+            for _ in range(coarse_steps):
+                pdfs = fn(pdfs, coeffs)
+            # repro: host-ok(timing fence: advance latency is the serving metric)
+            jax.block_until_ready(pdfs)
+            for l, arr in zip(levels, pdfs):
+                self._dev[l] = arr
         self._dev_newer = True
         nsub = 1 << levels[-1]
         self.stats.add(
             StageStats(
-                seconds=time.perf_counter() - t0,
+                seconds=sp.seconds,
                 exchange_rounds=coarse_steps * nsub,
             )
         )

@@ -22,13 +22,13 @@ numbers for the benchmark harness.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field as dc_field
 from pathlib import Path
 from typing import TYPE_CHECKING, Iterator
 
 from ..core.checkpoint import save_checkpoint
 from ..core.pipeline import StageStats
+from ..telemetry import get_tracer
 from .elastic import ResizeReport, resize_ranks
 from .ensemble import (
     Ensemble,
@@ -42,6 +42,8 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
     from ..lbm.driver import AMRLBM, LidDrivenCavityConfig
 
 __all__ = ["JobSpec", "Job", "SimulationService"]
+
+_TR = get_tracer()
 
 
 @dataclass(frozen=True)
@@ -133,12 +135,13 @@ class SimulationService:
             job_id=self._next_id,
             spec=spec,
             sim=AMRLBM(spec.config),
-            submitted_at=time.perf_counter(),
+            submitted_at=_TR.clock(),
         )
         self._next_id += 1
         self.jobs[job.job_id] = job
         self._pending.append(job)
         self.counters["jobs_submitted"] += 1
+        _TR.instant("job.submit", cat="serving", job=job.job_id)
         self._refresh_job_stats(job)
         return job.job_id
 
@@ -206,6 +209,9 @@ class SimulationService:
             self._groups.append(_Group(jobs=jobs, ensemble=ens))
             if len(jobs) >= 2:
                 self.counters["ensembles_formed"] += 1
+                _TR.instant(
+                    "ensemble.form", cat="serving", members=len(jobs)
+                )
         self._pending = []
 
     def run_round(self) -> bool:
@@ -215,14 +221,15 @@ class SimulationService:
         self._form_groups()
         if not self._groups:
             return False
-        t0 = time.perf_counter()
-        next_groups: list[_Group] = []
-        for g in self._groups:
-            next_groups.extend(self._run_group_chunk(g))
+        with _TR.stage("serving.round", cat="serving",
+                       groups=len(self._groups)) as sp:
+            next_groups: list[_Group] = []
+            for g in self._groups:
+                next_groups.extend(self._run_group_chunk(g))
         self._groups = next_groups
         self.counters["rounds"] += 1
         serving = self.data_stats["serving"]
-        serving["stage"].add(StageStats(seconds=time.perf_counter() - t0))
+        serving["stage"].add(StageStats(seconds=sp.seconds))
         serving["compile"] = {
             "hits": self.programs.hits,
             "misses": self.programs.misses,
@@ -238,7 +245,7 @@ class SimulationService:
 
     # -- internals -------------------------------------------------------------
     def _run_group_chunk(self, g: _Group) -> list[_Group]:
-        now = time.perf_counter()
+        now = _TR.clock()
         for j in g.jobs:
             if j.started_at is None:
                 j.started_at = now
@@ -256,6 +263,9 @@ class SimulationService:
                 parts = g.ensemble.adapt()  # materializes, may split
                 if len(parts) > 1:
                     self.counters["divergence_splits"] += len(parts) - 1
+                    _TR.instant(
+                        "ensemble.split", cat="serving", parts=len(parts)
+                    )
             else:
                 g.ensemble.materialize()  # diagnostics/checkpoints read host
                 parts = [g.ensemble]
@@ -327,13 +337,14 @@ class SimulationService:
 
     def _finish(self, job: Job) -> None:
         job.status = "done"
-        job.finished_at = time.perf_counter()
+        job.finished_at = _TR.clock()
         self.counters["jobs_completed"] += 1
         job.events.append({"type": "done", "step": job.step})
+        _TR.instant("job.done", cat="serving", job=job.job_id, step=job.step)
         self._refresh_job_stats(job)
 
     def _refresh_job_stats(self, job: Job) -> None:
-        now = job.finished_at if job.finished_at is not None else time.perf_counter()
+        now = job.finished_at if job.finished_at is not None else _TR.clock()
         run_s = (now - job.started_at) if job.started_at is not None else 0.0
         self.data_stats["serving"]["jobs"][job.job_id] = {
             "status": job.status,

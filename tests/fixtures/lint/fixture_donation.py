@@ -34,3 +34,18 @@ def sanctioned_read(pdfs, cfg):
     fn(pdfs)
     # repro: donation-ok(fixture: cpu backend resolves donate off, buffer survives)
     return pdfs  # NEG-ANNOTATED: allowlisted
+
+
+def with_block_rebind(pdfs, cfg, span):
+    fn = make_fused_superstep(**cfg)
+    with span:
+        pdfs = fn(pdfs)  # NEG-WITH-REBIND: revive must work inside a with suite
+        total = pdfs[0]
+    return total
+
+
+def with_block_use_after_donate(pdfs, cfg, span):
+    fn = make_fused_superstep(**cfg)
+    with span:
+        fn(pdfs)
+        return pdfs[0]  # TP-WITH: read after donate inside the with suite

@@ -80,8 +80,10 @@ def test_donation_checker_catches_use_after_donate():
     )
     findings = check_donation(cfg, ModuleCache(FIXTURES))
     # TP-DONATED 9 (direct read), TP-ALIAS 16 (alias read), TP-ATTR 23
-    # (attribute stash); the rebind (28) and annotated read (36) stay clean
-    assert _lines(findings, "fixture_donation.py") == [9, 16, 23]
+    # (attribute stash), TP-WITH 51 (read after donate inside a with suite);
+    # the rebinds (28, 42) and annotated read (36) stay clean — a with block
+    # is straight-line code, so a rebind inside it revives like any other
+    assert _lines(findings, "fixture_donation.py") == [9, 16, 23, 51]
     assert "use-after-donate" in findings[0].message
 
 

@@ -1,0 +1,235 @@
+#!/usr/bin/env python3
+"""Render (or validate) a telemetry Chrome-trace artifact.
+
+Default mode renders the paper-style per-stage breakdown from a trace file
+produced by ``repro.telemetry.export.write_chrome_trace``:
+
+* the per-stage wall-time table (refine / proxy / balance / migrate from the
+  AMR pipeline, halo / step / fused / particles from the stepping data
+  plane, the serving stages) — the repro of the paper's Figures 8-13
+  per-stage timing breakdowns, read off one artifact;
+* the per-substep phase table (emit / interior / route / absorb) for the
+  ``fused_sharded`` engine, plus the **interior-overlap efficiency**: the
+  fraction of host-side routing time that ran while interior stepping was
+  already dispatched to the device (route spans are marked ``overlapped``
+  when interior programs were dispatched that substep). 0.0 means no
+  overlap (the CPU-default unsplit absorb); ~1.0 means every routed byte
+  hid behind interior compute;
+* top per-rank-pair p2p bytes from the embedded bounded-metrics snapshot,
+  and the per-rank ring-buffer accounting (the bounded-metadata proof).
+
+``--check`` validates the artifact instead: structural Chrome-trace schema
+(traceEvents, phases, pid/tid/ts/dur types, process metadata) and — with
+``--require-substep-phases`` — that at least one substep carries all four
+distinct emit/interior/route/absorb phase spans (the PR's acceptance shape
+for a traced 4-rank fused_sharded run). Exit code 1 on any violation, so CI
+can gate on it.
+
+Usage:
+    python tools/trace_report.py TRACE.json
+    python tools/trace_report.py TRACE.json --check [--require-substep-phases]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+PHASES = ("emit", "interior", "route", "absorb")
+# stage-table ordering: AMR pipeline first, then data plane, then serving
+STAGE_ORDER = (
+    "refine", "proxy", "balance", "migrate",
+    "halo", "step", "fused", "particles",
+    "serving.round", "ensemble.advance", "resize",
+)
+
+
+def load_trace(path: str | Path) -> dict:
+    return json.loads(Path(path).read_text())
+
+
+# -----------------------------------------------------------------------------
+# validation
+# -----------------------------------------------------------------------------
+
+
+def check_trace(trace: dict, *, require_substep_phases: bool = False) -> list[str]:
+    """Structural validation; returns a list of violations (empty = valid)."""
+    errs: list[str] = []
+    if not isinstance(trace, dict) or "traceEvents" not in trace:
+        return ["not a Chrome-trace object (missing 'traceEvents')"]
+    events = trace["traceEvents"]
+    if not isinstance(events, list) or not events:
+        return ["'traceEvents' is empty or not a list"]
+    named_pids: set[int] = set()
+    used_pids: set[int] = set()
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errs.append(f"event {i}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in ("X", "i", "M", "C"):
+            errs.append(f"event {i}: unknown phase {ph!r}")
+            continue
+        if not isinstance(ev.get("pid"), int) or not isinstance(ev.get("tid"), int):
+            errs.append(f"event {i}: pid/tid must be ints")
+        if not isinstance(ev.get("name"), str) or not ev["name"]:
+            errs.append(f"event {i}: missing name")
+        if ph == "M":
+            if ev.get("name") == "process_name":
+                named_pids.add(ev.get("pid"))
+            continue
+        used_pids.add(ev.get("pid"))
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            errs.append(f"event {i}: bad ts {ts!r}")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errs.append(f"event {i}: bad dur {dur!r}")
+    for pid in sorted(used_pids - named_pids):
+        errs.append(f"pid {pid} has events but no process_name metadata")
+    if require_substep_phases:
+        by_substep: dict = defaultdict(set)
+        for ev in events:
+            if ev.get("ph") == "X" and ev.get("cat") == "substep":
+                args = ev.get("args") or {}
+                if "substep" in args and ev["name"] in PHASES:
+                    by_substep[args["substep"]].add(ev["name"])
+        complete = [s for s, names in by_substep.items() if set(PHASES) <= names]
+        if not by_substep:
+            errs.append("no substep-phase spans found (cat='substep')")
+        elif not complete:
+            errs.append(
+                "no substep carries all four phases "
+                f"{PHASES}; saw {dict((k, sorted(v)) for k, v in by_substep.items())}"
+            )
+    return errs
+
+
+# -----------------------------------------------------------------------------
+# report
+# -----------------------------------------------------------------------------
+
+
+def _x_events(trace: dict) -> list[dict]:
+    return [ev for ev in trace["traceEvents"] if ev.get("ph") == "X"]
+
+
+def stage_table(trace: dict) -> list[tuple[str, str, int, float, float]]:
+    """(cat, name, count, total_s, mean_ms) rows for every span name."""
+    agg: dict[tuple[str, str], list] = defaultdict(lambda: [0, 0.0])
+    for ev in _x_events(trace):
+        a = agg[(ev.get("cat", "?"), ev["name"])]
+        a[0] += 1
+        a[1] += ev.get("dur", 0.0) / 1e6
+    rows = []
+    for (cat, name), (count, total) in agg.items():
+        rows.append((cat, name, count, total, total / count * 1e3))
+    order = {n: i for i, n in enumerate(STAGE_ORDER)}
+    rows.sort(key=lambda r: (order.get(r[1], len(order)), r[0], r[1]))
+    return rows
+
+
+def overlap_efficiency(trace: dict) -> tuple[float, float, float]:
+    """(efficiency, overlapped_route_s, total_route_s) from route spans."""
+    total = overlapped = 0.0
+    for ev in _x_events(trace):
+        if ev.get("cat") == "substep" and ev["name"] == "route":
+            dur = ev.get("dur", 0.0) / 1e6
+            total += dur
+            if (ev.get("args") or {}).get("overlapped"):
+                overlapped += dur
+    return (overlapped / total if total > 0 else 0.0), overlapped, total
+
+
+def render_report(trace: dict) -> str:
+    out: list[str] = []
+    events = _x_events(trace)
+    if not events:
+        return "(no span events)"
+    t0 = min(ev["ts"] for ev in events)
+    t1 = max(ev["ts"] + ev.get("dur", 0.0) for ev in events)
+    wall = (t1 - t0) / 1e6
+    out.append(f"trace wall time: {wall * 1e3:.2f} ms "
+               f"({len(events)} spans, {len({ev['pid'] for ev in events})} ranks)")
+    out.append("")
+    out.append("Per-stage breakdown (paper Figs 8-13 style):")
+    out.append(f"  {'stage':<28} {'cat':<12} {'count':>6} {'total_ms':>10} "
+               f"{'mean_ms':>9} {'share':>7}")
+    for cat, name, count, total, mean_ms in stage_table(trace):
+        share = total / wall if wall > 0 else 0.0
+        out.append(f"  {name:<28} {cat:<12} {count:>6} {total * 1e3:>10.3f} "
+                   f"{mean_ms:>9.4f} {share:>6.1%}")
+    eff, ov, tot = overlap_efficiency(trace)
+    out.append("")
+    if tot > 0:
+        out.append(
+            f"interior-overlap efficiency: {eff:.3f} "
+            f"({ov * 1e3:.3f} ms of {tot * 1e3:.3f} ms routing overlapped "
+            "with dispatched interior stepping)"
+        )
+    else:
+        out.append("interior-overlap efficiency: n/a (no route spans)")
+    meta = trace.get("metadata") or {}
+    metrics = meta.get("metrics") or {}
+    p2p = metrics.get("comm.p2p_bytes")
+    if p2p:
+        out.append("")
+        out.append("Top per-rank-pair p2p bytes:")
+        series = sorted(p2p["series"].items(), key=lambda kv: -kv[1])[:8]
+        for label, val in series:
+            out.append(f"  {label:<24} {int(val):>14,} B")
+    buffers = meta.get("buffers")
+    if buffers:
+        out.append("")
+        out.append("Per-rank ring buffers (bounded-metadata proof):")
+        for rank, st in sorted(buffers.items(), key=lambda kv: int(kv[0])):
+            out.append(
+                f"  rank {rank}: {st['entries']}/{st['capacity']} entries, "
+                f"{st['evicted']} evicted of {st['total']} total"
+            )
+    return "\n".join(out)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="trace_report", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("trace", help="trace JSON produced by repro.telemetry")
+    ap.add_argument("--check", action="store_true",
+                    help="validate the trace schema instead of rendering")
+    ap.add_argument("--require-substep-phases", action="store_true",
+                    help="with --check: require a substep with all four "
+                         "emit/interior/route/absorb phase spans")
+    args = ap.parse_args(argv)
+    try:
+        trace = load_trace(args.trace)
+    except (OSError, ValueError) as e:
+        print(f"trace_report: cannot read {args.trace}: {e}", file=sys.stderr)
+        return 1
+    if args.check:
+        errs = check_trace(
+            trace, require_substep_phases=args.require_substep_phases
+        )
+        if errs:
+            print(f"trace_report: {args.trace} INVALID:", file=sys.stderr)
+            for e in errs:
+                print(f"  - {e}", file=sys.stderr)
+            return 1
+        nev = len(trace["traceEvents"])
+        print(f"trace_report: OK ({nev} events, schema valid)")
+        return 0
+    try:
+        print(render_report(trace))
+    except BrokenPipeError:  # report piped into head/less and truncated
+        sys.stderr.close()  # suppress the interpreter's shutdown warning
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
