@@ -41,27 +41,47 @@ SCHEMA: dict[str, type | tuple[type, ...]] = {
     "fused_sharded_halo_p2p_bytes_per_step": int,
 }
 MODES = ("restack", "arena", "fused", "sharded", "fused_sharded")
+# modes the benchmark only exercises when the environment supports them
+# (device_sharded needs >= nranks XLA devices): required to be well-formed
+# when present, never required to exist — legacy entries and single-device
+# runs stay valid
+OPTIONAL_MODES = ("device_sharded",)
+
+
+def _check_mode(i: int, entry: dict, mode: str, *, required: bool) -> list[str]:
+    errs = []
+    bps = entry.get("blocks_per_s")
+    present = isinstance(bps, dict) and mode in bps
+    if not required and not present:
+        return []
+    if isinstance(bps, dict) and not isinstance(bps.get(mode), (int, float)):
+        errs.append(f"entry {i}: blocks_per_s[{mode!r}] missing or non-numeric")
+    cs = entry.get("compile_s")
+    if isinstance(cs, dict) and not isinstance(cs.get(mode), (int, float)):
+        errs.append(f"entry {i}: compile_s[{mode!r}] missing or non-numeric")
+    ss = entry.get("stage_seconds_per_step")
+    if isinstance(ss, dict):
+        per_mode = ss.get(mode)
+        if not isinstance(per_mode, dict) or not all(
+            isinstance(v, (int, float)) and v >= 0 for v in per_mode.values()
+        ):
+            errs.append(
+                f"entry {i}: stage_seconds_per_step[{mode!r}] missing or "
+                "not a stage->seconds dict"
+            )
+    return errs
 
 
 def _check_extra(i: int, entry: dict) -> list[str]:
     errs = []
     for mode in MODES:
-        bps = entry.get("blocks_per_s")
-        if isinstance(bps, dict) and not isinstance(bps.get(mode), (int, float)):
-            errs.append(f"entry {i}: blocks_per_s[{mode!r}] missing or non-numeric")
-        cs = entry.get("compile_s")
-        if isinstance(cs, dict) and not isinstance(cs.get(mode), (int, float)):
-            errs.append(f"entry {i}: compile_s[{mode!r}] missing or non-numeric")
-        ss = entry.get("stage_seconds_per_step")
-        if isinstance(ss, dict):
-            per_mode = ss.get(mode)
-            if not isinstance(per_mode, dict) or not all(
-                isinstance(v, (int, float)) and v >= 0 for v in per_mode.values()
-            ):
-                errs.append(
-                    f"entry {i}: stage_seconds_per_step[{mode!r}] missing or "
-                    "not a stage->seconds dict"
-                )
+        errs.extend(_check_mode(i, entry, mode, required=True))
+    for mode in OPTIONAL_MODES:
+        errs.extend(_check_mode(i, entry, mode, required=False))
+        if isinstance(entry.get("blocks_per_s"), dict) and mode in entry["blocks_per_s"]:
+            for key in (f"{mode}_speedup", f"{mode}_halo_p2p_bytes_per_step"):
+                if not isinstance(entry.get(key), (int, float)):
+                    errs.append(f"entry {i}: {key!r} missing or non-numeric")
     return errs
 
 

@@ -244,14 +244,28 @@ def stepping(
     # restack/arena/fused never consult Block.owner, so their timings are
     # rank-independent: measure them once and reuse across the sweep
     baseline: dict[str, tuple[float, float, int, float, dict]] = {}
-    rank_dependent = ("sharded", "fused_sharded")
+    rank_dependent = ("sharded", "fused_sharded", "device_sharded")
     for nranks in ranks:
         results: dict[str, float] = {}
         halo_bytes: dict[str, int] = {}
         wall: dict[str, float] = {}
         compile_s: dict[str, float] = {}
         stage_s: dict[str, dict[str, float]] = {}
-        for mode in ("restack", "arena", "fused", "sharded", "fused_sharded"):
+        for mode in (
+            "restack", "arena", "fused", "sharded", "fused_sharded",
+            "device_sharded",
+        ):
+            if mode == "device_sharded":
+                import jax
+
+                if jax.device_count() < nranks:
+                    print(
+                        f"stepping: skipping device_sharded at n{nranks} "
+                        f"(only {jax.device_count()} XLA device(s); set "
+                        "XLA_FLAGS=--xla_force_host_platform_device_count"
+                        f"={nranks})"
+                    )
+                    continue
             if mode not in rank_dependent and mode in baseline:
                 (
                     results[mode], wall[mode], halo_bytes[mode],
@@ -274,10 +288,15 @@ def stepping(
                     (2**l) * sum(1 for b in sim.forest.all_blocks() if b.level == l)
                     for l in sim.forest.levels_in_use()
                 )
-                # fused_sharded routes its in-program device messages through
-                # Comm but attributes them to the "fused" stage (halo and
-                # step are indistinguishable inside the per-rank programs)
-                stage = "fused" if mode == "fused_sharded" else "halo"
+                # fused_sharded/device_sharded route their in-program device
+                # messages through Comm but attribute them to the "fused"
+                # stage (halo and step are indistinguishable inside the
+                # per-rank / shard_map programs)
+                stage = (
+                    "fused"
+                    if mode in ("fused_sharded", "device_sharded")
+                    else "halo"
+                )
                 h0 = sim.data_stats[stage].p2p_bytes
                 sec0 = {st: sim.data_stats[st].seconds for st in data_stages}
                 if trace:
@@ -318,6 +337,19 @@ def stepping(
         _csv("stepping", f"n{nranks}_sharded_speedup", round(sharded_rel, 3))
         _csv("stepping", f"n{nranks}_fused_sharded_speedup", round(fsh_rel, 3))
         _csv("stepping", f"n{nranks}_sharded_halo_bytes_per_step", halo_bytes["sharded"])
+        # device_sharded is present only when the process has >= nranks XLA
+        # devices (see the skip above), so its keys are optional in the
+        # trajectory schema (validated when present by check_stepping.py)
+        dev_extra: dict[str, float | int] = {}
+        if "device_sharded" in results:
+            dev_rel = results["device_sharded"] / results["restack"]
+            _csv("stepping", f"n{nranks}_device_sharded_speedup", round(dev_rel, 3))
+            dev_extra = {
+                "device_sharded_speedup": round(dev_rel, 3),
+                "device_sharded_halo_p2p_bytes_per_step": halo_bytes[
+                    "device_sharded"
+                ],
+            }
         traj_entries.append(
             {
                 "scenario": "lid-driven-cavity",
@@ -337,6 +369,7 @@ def stepping(
                 "fused_sharded_speedup": round(fsh_rel, 3),
                 "sharded_halo_p2p_bytes_per_step": halo_bytes["sharded"],
                 "fused_sharded_halo_p2p_bytes_per_step": halo_bytes["fused_sharded"],
+                **dev_extra,
             }
         )
     _append_trajectory("stepping", "BENCH_stepping.json", traj_entries)

@@ -5,11 +5,14 @@ diffusion load balancing, and per-level time stepping on persistent
 LevelArena buffers (use ``--mode fused`` for the device-resident fused
 superstep — one jitted program per coarse step — ``--mode restack`` for the
 legacy per-substep restacking path, ``--mode sharded`` for the rank-sharded
-data plane with cross-rank halo messaging, and ``--mode fused_sharded`` for
-the per-rank device-resident composition of the two; see the README's
-"Choosing a stepping mode"). Prints per-epoch diagnostics including the AMR
-pipeline stage costs and, per mode, data-plane halo traffic or
-host<->device transfer counts.
+data plane with cross-rank halo messaging, ``--mode fused_sharded`` for
+the per-rank device-resident composition of the two, and ``--mode
+device_sharded`` for one rank per XLA device with in-program ``ppermute``
+halo routing — needs ``--nranks`` devices, e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=4 ... --mode
+device_sharded --nranks 4``; see the README's "Choosing a stepping mode").
+Prints per-epoch diagnostics including the AMR pipeline stage costs and,
+per mode, data-plane halo traffic or host<->device transfer counts.
 
     PYTHONPATH=src python examples/lbm_cavity_amr.py [--steps 12] [--mode arena]
 """
@@ -25,15 +28,19 @@ def main() -> None:
     ap.add_argument("--amr-interval", type=int, default=3)
     ap.add_argument(
         "--mode",
-        choices=("arena", "fused", "sharded", "fused_sharded", "restack"),
+        choices=(
+            "arena", "fused", "sharded", "fused_sharded", "device_sharded",
+            "restack",
+        ),
         default="arena",
     )
+    ap.add_argument("--nranks", type=int, default=8)
     args = ap.parse_args()
 
     cfg = LidDrivenCavityConfig(
         root_grid=(2, 2, 2),
         cells_per_block=(8, 8, 8),
-        nranks=8,
+        nranks=args.nranks,
         omega=1.6,
         u_lid=(0.08, 0.0, 0.0),
         collision="trt",
@@ -78,6 +85,13 @@ def main() -> None:
               f"{fused.p2p_messages} p2p messages over {fused.exchange_rounds} "
               f"rounds; {h2d} h2d / {d2h} d2h transfers across "
               f"{len(residencies)} ranks")
+    if args.mode == "device_sharded":
+        fused = sim.data_stats["fused"]
+        print(f"device_sharded: {fused.p2p_bytes} ppermute bytes in "
+              f"{fused.p2p_messages} p2p messages over {fused.exchange_rounds} "
+              f"in-program exchanges; {sim.comm.ppermute_rounds} ppermute "
+              f"rounds, {sim.comm.ppermute_pad_bytes} pad bytes, "
+              f"{sim.engine.device_held_bytes_per_rank()} held bytes/device")
     print(f"done: {sim.amr_cycles} AMR cycles executed")
 
 

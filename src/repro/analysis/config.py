@@ -72,9 +72,12 @@ DEFAULTS: dict = {
             "repro.core.checkpoint",
             "repro.core.resilience",
         ],
-        # collective-class call names; ppermute/collective_permute are
-        # deliberately absent — p2p next-neighbor traffic is the paper's
-        # sanctioned communication pattern
+        # collective-class call names. ppermute/collective_permute ARE
+        # listed: they are the sanctioned p2p halo fabric (a partial
+        # permutation has no fan-in), but every call site must say so —
+        # exempt-with-reason via '# repro: collective-ok(...)' or live in
+        # the fabric provider itself, so a stray ppermute outside the
+        # audited fabric still surfaces
         "collectives": [
             "psum",
             "pmean",
@@ -87,6 +90,8 @@ DEFAULTS: dict = {
             "all_to_all",
             "alltoall",
             "reduce_scatter",
+            "ppermute",
+            "collective_permute",
         ],
     },
     "retrace": {

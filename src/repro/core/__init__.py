@@ -8,7 +8,7 @@ and buddy-based resilience.
 """
 
 from .blockid import ForestGeometry, hilbert_index_3d
-from .comm import Comm, CommStats
+from .comm import Comm, CommStats, DeviceComm
 from .forest import Block, BlockForest, make_forest_from_levels, make_uniform_forest
 from .refine import mark_and_balance_targets
 from .proxy import build_proxy, migrate_proxy_blocks
@@ -22,6 +22,7 @@ __all__ = [
     "hilbert_index_3d",
     "Comm",
     "CommStats",
+    "DeviceComm",
     "Block",
     "BlockForest",
     "make_forest_from_levels",

@@ -29,7 +29,7 @@ from typing import Any, Callable, Iterable
 
 from ..telemetry import BYTES_BUCKETS, get_tracer
 
-__all__ = ["CommStats", "Comm"]
+__all__ = ["CommStats", "Comm", "DeviceComm"]
 
 _TR = get_tracer()
 
@@ -158,3 +158,69 @@ class Comm:
 
     def barrier(self) -> None:
         self.stats.rounds += 1
+
+
+class DeviceComm(Comm):
+    """Accounting fabric for the real device data plane (`device_sharded`).
+
+    When ranks are XLA devices under ``shard_map``, halo payloads move as
+    ``jax.lax.ppermute`` collectives *inside* the compiled program — the
+    fabric never touches the bytes. This subclass keeps the control plane
+    (AMR, balancing, migration) on the simulated :class:`Comm` superstep
+    path unchanged, and adds :meth:`ppermute` so the stepping engine can
+    attribute the in-program traffic into the same :class:`CommStats` and
+    telemetry counters the Table-1 tests and trace reports read. ppermute is
+    a *partial permutation* — pure point-to-point routing with no fan-in —
+    so its bytes are accounted as p2p, never as collective held-bytes.
+
+    ``pad_bytes`` tracks the wire overhead of equal-shape round payloads
+    (shorter messages zero-padded to the round maximum); it is reported
+    separately and deliberately kept out of ``p2p_bytes`` so the logical
+    traffic stays byte-identical to the host-sharded plan.
+    """
+
+    def __init__(self, nranks: int):
+        super().__init__(nranks)
+        self.ppermute_rounds = 0
+        self.ppermute_pad_bytes = 0
+
+    def ppermute(
+        self,
+        messages: Iterable[Any],
+        *,
+        rounds: int = 1,
+        pad_bytes: int = 0,
+    ) -> None:
+        """Account one substep's worth of in-program halo permutes.
+
+        ``messages`` are :class:`~repro.lbm.halo.CompiledRankMessage`-likes
+        (``src_rank``/``dst_rank``/``nbytes``); ``rounds`` is the number of
+        ``ppermute`` calls the schedule needed (one per partial permutation).
+        """
+        inbox: dict[int, int] = defaultdict(int)
+        for m in messages:
+            self.stats.p2p_messages += 1
+            self.stats.p2p_bytes += m.nbytes
+            self.stats.sent_bytes_by_rank[m.src_rank] += m.nbytes
+            inbox[m.dst_rank] += m.nbytes
+            if _TR.enabled:
+                _TR.metrics.counter("comm.p2p_bytes").inc(
+                    m.nbytes, src=m.src_rank, dst=m.dst_rank
+                )
+                _TR.metrics.counter("comm.p2p_messages").inc(
+                    src=m.src_rank, dst=m.dst_rank
+                )
+                _TR.metrics.histogram(
+                    "comm.p2p_message_bytes", buckets=BYTES_BUCKETS
+                ).observe(m.nbytes)
+        self.stats.rounds += 1
+        self.stats.exchange_rounds += 1
+        self.stats.max_inbox_bytes_per_round = max(
+            self.stats.max_inbox_bytes_per_round, max(inbox.values(), default=0)
+        )
+        self.ppermute_rounds += rounds
+        self.ppermute_pad_bytes += pad_bytes
+        if _TR.enabled:
+            _TR.metrics.counter("comm.ppermute_rounds").inc(rounds)
+            if pad_bytes:
+                _TR.metrics.counter("comm.ppermute_pad_bytes").inc(pad_bytes)

@@ -50,6 +50,7 @@ __all__ = [
     "make_rank_emit",
     "make_rank_absorb",
     "make_rank_absorb_split",
+    "make_device_superstep",
     "boundary_slot_sets",
     "resolve_interpret",
     "resolve_donate",
@@ -910,6 +911,201 @@ def make_rank_absorb_split(
             jax.jit(boundary, donate_argnums=0),
         )
     return jax.jit(interior), jax.jit(boundary)
+
+
+def make_device_superstep(
+    *,
+    mesh,
+    levels,
+    plans,
+    schedules,
+    steppers,
+    unroll_limit: int = 32,
+    donate: bool | None = None,
+):
+    """Compile one coarse step as a single SPMD program over real XLA devices.
+
+    The ``device_sharded`` analogue of the per-rank program set built by
+    ``FusedShardedEngine``: one ``shard_map`` over a 1-D ``mesh`` (axis
+    ``"ranks"``, one device per rank) runs the whole ``2^lmax`` substep cycle,
+    and the simulated ``Comm`` fabric's per-pair messages become
+    ``jax.lax.ppermute`` calls *inside* the program. Per-rank asymmetry — the
+    gather/scatter index arrays of :func:`compile_rank_halo_plan` differ on
+    every rank — is expressed as ``lax.switch`` on ``lax.axis_index``: each
+    branch closes over exactly one rank's index constants, so the arithmetic
+    (including the canonical fixed-order octet sum) is *identical* to the
+    host-fabric engines and the bitwise conformance contract carries over.
+
+    Buffers are the equal-blocks-per-rank padded stacks: each per-level
+    operand is ``(nranks, Bmax_l, ...)`` sharded on the leading axis, so every
+    shard sees ``(1, Bmax_l, ...)`` and rank-local slot ids address it
+    directly. Payloads for one :class:`~repro.lbm.halo.PpermuteRound` are
+    zero-padded to the round's ``num_cells`` so all participants ship one
+    shape; receivers scatter only the logical rows.
+
+    Args:
+        mesh: 1-D ``jax.sharding.Mesh`` whose single axis enumerates ranks.
+        levels: global refinement levels in use (buffer tuple order is the
+            ascending sort, same for every rank).
+        plans: pattern index ``p`` -> :class:`CompiledRankHaloPlan` for the
+            active set ``{l : l >= lmax - p}``.
+        schedules: pattern index ``p`` -> ppermute rounds from
+            :func:`~repro.lbm.halo.schedule_ppermute_rounds` over
+            ``plans[p].messages``.
+        steppers: level -> ``step(f, mask) -> f`` (shared with every other
+            engine — same kernel, same trace).
+
+    Returns:
+        A jitted ``superstep(pdfs: tuple, masks: tuple) -> tuple`` advancing
+        one coarse step; each tuple holds one padded global per-level stack.
+        Masks are operands (not closed-over constants) because they are
+        sharded alongside the pdfs.
+    """
+    from jax.experimental.shard_map import shard_map  # noqa: PLC0415 — jax<0.5 has no jax.shard_map
+
+    levels = tuple(sorted(levels))
+    index = {l: i for i, l in enumerate(levels)}
+    lmax = levels[-1]
+    nsub = 1 << lmax
+    axis = mesh.axis_names[0]
+    nranks = mesh.shape[axis]
+
+    def make_emit_branch(rank: int, rounds):
+        # per round: this rank's outbound gather (or a zero payload)
+        specs = []
+        for rnd in rounds:
+            mine = [m for m in rnd.messages if m.src_rank == rank]
+            assert len(mine) <= 1, (rank, rnd.perm)
+            if mine:
+                m = mine[0]
+                segs = tuple(
+                    (index[sl], kind, jnp.asarray(sb), jnp.asarray(sc))
+                    for sl, kind, sb, sc in m.gather
+                )
+                specs.append((segs, m.num_cells, rnd.num_cells))
+            else:
+                specs.append((None, 0, rnd.num_cells))
+
+        def emit(bufs):
+            C = _flat3(bufs[0]).shape[1]
+            dt = bufs[0].dtype
+            out = []
+            for segs, n, cap in specs:
+                if segs is None:
+                    out.append(jnp.zeros((cap, C), dt))
+                    continue
+                parts = [
+                    _gather_vals(bufs[li], kind, sb, sc) for li, kind, sb, sc in segs
+                ]
+                v = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+                if n < cap:
+                    v = jnp.concatenate([v, jnp.zeros((cap - n, C), dt)], axis=0)
+                out.append(v)
+            return tuple(out)
+
+        return emit
+
+    def make_exchange_branch(rank: int, rounds, plan):
+        inbound = []  # (round idx, lowered scatter segments), in round order
+        for k, rnd in enumerate(rounds):
+            for m in rnd.messages:
+                if m.dst_rank == rank:
+                    segs = tuple(
+                        (index[dl], jnp.asarray(db), jnp.asarray(dc), n)
+                        for dl, db, dc, n in m.scatter
+                    )
+                    inbound.append((k, segs))
+        local = plan.local.get(rank)
+        local_ops = _device_plan_ops(local, index) if local is not None else []
+
+        def exchange(bufs, recvs=()):
+            bufs = list(bufs)
+            # inbound scatters write ghost cells, local gathers read interior
+            # cells — disjoint, so the order is immaterial (same argument as
+            # make_rank_absorb)
+            for k, segs in inbound:
+                msg = recvs[k]
+                off = 0
+                for li, db, dc, n in segs:
+                    d = bufs[li]
+                    bufs[li] = (
+                        _flat3(d).at[db, :, dc].set(msg[off : off + n]).reshape(d.shape)
+                    )
+                    off += n
+            bufs = _run_plan_ops(local_ops, bufs)
+            return tuple(bufs)
+
+        return exchange
+
+    def make_pattern_branch(p: int):
+        rounds = schedules[p]
+        active = tuple(sorted((l for l in levels if l >= lmax - p), reverse=True))
+        emits = [make_emit_branch(r, rounds) for r in range(nranks)]
+        exchanges = [make_exchange_branch(r, rounds, plans[p]) for r in range(nranks)]
+        perms = [list(rnd.perm) for rnd in rounds]
+
+        def branch(bufs, masks):
+            if nranks == 1:
+                bufs = exchanges[0](bufs)
+            else:
+                ridx = jax.lax.axis_index(axis)
+                if rounds:
+                    payloads = jax.lax.switch(ridx, emits, tuple(bufs))
+                    recvs = tuple(
+                        # repro: collective-ok(ppermute is a partial permutation — pure p2p halo routing, bytes attributed via DeviceComm.ppermute)
+                        jax.lax.ppermute(pl, axis, perm)
+                        for pl, perm in zip(payloads, perms)
+                    )
+                    bufs = jax.lax.switch(ridx, exchanges, tuple(bufs), recvs)
+                else:
+                    bufs = jax.lax.switch(
+                        ridx,
+                        [lambda b, e=e: e(b) for e in exchanges],
+                        tuple(bufs),
+                    )
+            bufs = list(bufs)
+            for l in active:  # finest first, as the host driver orders
+                i = index[l]
+                bufs[i] = steppers[l](bufs[i], masks[i])
+            return tuple(bufs)
+
+        return branch
+
+    branches = [make_pattern_branch(p) for p in range(lmax + 1)]
+    pattern = [
+        lmax if s == 0 else min((s & -s).bit_length() - 1, lmax) for s in range(nsub)
+    ]
+
+    def mapped(pdfs, masks):
+        bufs = tuple(b[0] for b in pdfs)  # shard_map hands (1, Bmax, ...)
+        m = tuple(mm[0] for mm in masks)
+        if nsub <= unroll_limit:
+            for s in range(nsub):
+                bufs = branches[pattern[s]](bufs, m)
+        else:
+            pattern_dev = jnp.asarray(pattern, dtype=jnp.int32)
+
+            def body(s, carry):
+                return jax.lax.switch(
+                    pattern_dev[s],
+                    [lambda c, br=br: br(c, m) for br in branches],
+                    carry,
+                )
+
+            bufs = jax.lax.fori_loop(0, nsub, body, bufs)
+        return tuple(b[None] for b in bufs)
+
+    spec = jax.sharding.PartitionSpec(axis)
+    sm = shard_map(
+        mapped,
+        mesh=mesh,
+        in_specs=(spec, spec),
+        out_specs=spec,
+        check_rep=False,  # lax.switch on axis_index is deliberately per-device
+    )
+    if resolve_donate(donate):
+        return jax.jit(sm, donate_argnums=0)
+    return jax.jit(sm)
 
 
 def fused_stream_collide(

@@ -54,6 +54,7 @@ import numpy as np
 from ..core import (
     AMRPipeline,
     Comm,
+    DeviceComm,
     DiffusionBalancer,
     ForestGeometry,
     SFCBalancer,
@@ -113,7 +114,7 @@ class LidDrivenCavityConfig:
     # unsplit program, breaking the bitwise conformance contract)
     overlap_split: bool | None = None
     # one StepEngine per mode; see README "Choosing a stepping mode"
-    stepping_mode: str = "arena"  # | "fused" | "sharded" | "fused_sharded" | "restack"
+    stepping_mode: str = "arena"  # | "fused" | "sharded" | "fused_sharded" | "device_sharded" | "restack"
     obstacle_fn: Callable[[np.ndarray], np.ndarray] | None = None  # (N,3)->bool
     # optional Lagrangian tracer layer (repro.particles); None disables it
     particles: ParticlesConfig | None = None
@@ -151,7 +152,10 @@ class AMRLBM:
         self.geom = ForestGeometry(root_grid=cfg.root_grid, max_level=12)
         self.fields = make_lbm_fields(self.spec)
         self.registry = self.fields  # typed registry drives all subsystems
-        self.comm = Comm(cfg.nranks)
+        # device_sharded moves halo payloads as in-program ppermute; the
+        # DeviceComm fabric attributes those bytes into the same counters
+        comm_cls = DeviceComm if cfg.stepping_mode == "device_sharded" else Comm
+        self.comm = comm_cls(cfg.nranks)
         # Lagrangian tracers: the particle set registers as one more §2.5
         # block-data item (migration/checkpoint/resilience come for free) and
         # installs the cells + alpha*N load model into the pipeline, so the

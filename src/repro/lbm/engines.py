@@ -52,6 +52,7 @@ from ..telemetry import get_tracer
 from ..kernels.lbm_collide.ops import (
     boundary_slot_sets,
     make_arena_stream_collide,
+    make_device_superstep,
     make_fused_superstep,
     make_halo_stream_collide,
     make_rank_absorb,
@@ -59,11 +60,15 @@ from ..kernels.lbm_collide.ops import (
     make_rank_emit,
     make_stream_collide,
 )
+from .grid import CellType
 from .halo import (
     compile_ghost_plan,
     compile_rank_halo_plan,
     fill_ghost_layers,
     fill_ghost_layers_sharded,
+    padded_block_counts,
+    schedule_ppermute_rounds,
+    verify_padded_plan,
 )
 from .lattice import omega_for_level
 
@@ -724,5 +729,278 @@ class FusedShardedEngine(ShardedEngine):
         # fused engine (one logical ghost-exchange round per substep) rather
         # than the Comm superstep count the delta carries — the latter is 0
         # at one rank even though every substep exchanged intra-rank ghosts
+        stage.exchange_rounds = coarse_steps * progs.nsub
+        self.sim.data_stats["fused"].add(stage)
+
+
+@dataclass
+class _DevicePrograms:
+    """One compiled SPMD superstep for a (storage version, level set): the
+    shard_map'ed program plus the per-pattern message tables the advance loop
+    feeds :meth:`~repro.core.comm.DeviceComm.ppermute` accounting from."""
+
+    levels: tuple[int, ...]
+    counts: dict[int, int]
+    nsub: int
+    pattern: list[int]
+    fn: Callable
+    messages: dict[int, tuple]
+    rounds: dict[int, int]
+    pad_bytes: dict[int, int]
+
+
+@_register
+class DeviceShardedEngine(ShardedEngine):
+    """Real multi-device rank sharding: one XLA device per rank.
+
+    Where ``fused_sharded`` *simulates* the distributed data plane (per-rank
+    programs on one device, payloads routed through the host ``Comm``), this
+    mode places each rank's block stacks on its own device via ``shard_map``
+    over a 1-D mesh and moves halo payloads with ``jax.lax.ppermute`` inside
+    the compiled program — no host involvement per substep at all, not even
+    routing. Host devices are provisioned with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (see
+    ``launch/env_preset.sh``); on a real TPU/GPU pod the same program maps
+    onto the physical interconnect unchanged.
+
+    Equal-blocks-per-rank padding makes the program SPMD: every level's stack
+    is padded to the max per-rank block count with all-WALL masks and
+    weight-vector PDFs — an exact fixed point of the stream+collide kernel
+    (all-WALL streaming bounces the symmetric weights onto themselves and the
+    final fluid blend returns the input), so padded slots are provably dead:
+    never read by any halo plan (``verify_padded_plan``), unchanged by every
+    step. The ``Comm`` fabric must be a :class:`~repro.core.comm.DeviceComm`
+    (the driver wires this) so the in-program ppermute traffic lands in the
+    same Table-1 counters as every other mode.
+    """
+
+    mode = "device_sharded"
+
+    def __init__(self, sim: "AMRLBM") -> None:
+        super().__init__(sim)
+        n = self.cfg.nranks
+        ndev = jax.device_count()
+        if ndev < n:
+            raise RuntimeError(
+                f"device_sharded needs one XLA device per rank: nranks={n} but "
+                f"jax.device_count()={ndev}. Provision host devices with "
+                "XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{n} before the first jax import (launch/env_preset.sh does "
+                "this), or lower cfg.nranks."
+            )
+        if not hasattr(sim.comm, "ppermute"):
+            raise TypeError(
+                "device_sharded requires a DeviceComm fabric so in-program "
+                f"ppermute traffic is accounted; got {type(sim.comm).__name__}"
+            )
+        self.mesh = jax.sharding.Mesh(
+            np.array(jax.devices()[:n]),  # repro: host-ok(device handles, not array data)
+            ("ranks",),
+        )
+        self._dev_programs: _DevicePrograms | None = None
+        self._dev_programs_key: tuple | None = None
+        self._dev_levels: tuple[int, ...] | None = None
+        self._dev_pdfs: tuple | None = None
+        self._dev_masks: tuple | None = None
+        self._dev_version = -1
+        self._host_stale = False  # device pdfs newer than the host arenas
+
+    # -- storage / invalidation ------------------------------------------------
+    def adopt(self, forest: "BlockForest") -> None:
+        assert not self._host_stale, (
+            "materialize_host() before adopt: device-resident steps would be "
+            "lost rebinding the arenas"
+        )
+        super().adopt(forest)
+
+    def masks_refreshed(self) -> None:
+        super().masks_refreshed()
+        self._dev_masks = None
+
+    def materialize_host(self) -> None:
+        if not self._host_stale:
+            return
+        assert self._dev_pdfs is not None and self._dev_levels is not None
+        with _TR.span("device:materialize_host", cat="transfer"):
+            for i, l in enumerate(self._dev_levels):
+                # repro: host-ok(AMR-event download: device-newer pdfs flush to the arenas)
+                host = np.asarray(self._dev_pdfs[i])  # (R, Bmax, ...)
+                for r in range(self.cfg.nranks):
+                    buf = self.arenas.buffer(r, l, "pdf")
+                    if buf is not None and buf.shape[0]:
+                        np.copyto(buf, host[r, : buf.shape[0]])
+        self._host_stale = False
+
+    def exchange_ghosts(self, active: set[int] | None = None) -> None:
+        # host-visible ghost refresh (post-AMR, pre-advection): flush device
+        # steps first, then run the host-fabric exchange. The device copy's
+        # interiors stay current (the exchange only writes ghost cells) and
+        # its ghosts are re-exchanged in-program at the next substep 0, so
+        # the device state is deliberately NOT invalidated here — same
+        # contract as fused_sharded's residency.
+        self.materialize_host()
+        super().exchange_ghosts(active)
+
+    # -- compiled programs -----------------------------------------------------
+    def _programs(self) -> _DevicePrograms:
+        forest = self.sim.forest
+        levels = tuple(sorted(forest.levels_in_use()))
+        key = (self.arenas.version, levels)
+        if self._dev_programs is not None and self._dev_programs_key == key:
+            return self._dev_programs
+        with _TR.span("build:device_programs", cat="compile",
+                      version=self.arenas.version):
+            self._dev_programs = self._build_programs(forest, levels)
+        self._dev_programs_key = key
+        return self._dev_programs
+
+    def _build_programs(self, forest: "BlockForest",
+                        levels: tuple[int, ...]) -> _DevicePrograms:
+        lmax = levels[-1]
+        nsub = 1 << lmax
+        nranks = self.cfg.nranks
+        per_rank = self.arenas.per_rank
+        rank_slots = {
+            r: {l: per_rank[r].slots(l) for l in per_rank[r].levels()}
+            for r in range(nranks)
+        }
+        counts = padded_block_counts(rank_slots, nranks)
+        pattern = [
+            lmax if s == 0 else min((s & -s).bit_length() - 1, lmax)
+            for s in range(nsub)
+        ]
+        fs = self.sim.fields.fields["pdf"]
+        lead = int(np.prod(fs.shape, dtype=np.int64)) if fs.shape else 1
+        itemsize = np.dtype(fs.dtype).itemsize
+        plans: dict[int, object] = {}
+        schedules: dict[int, tuple] = {}
+        messages: dict[int, tuple] = {}
+        rounds_n: dict[int, int] = {}
+        pad_bytes: dict[int, int] = {}
+        for p in range(lmax + 1):
+            active = {l for l in levels if l >= lmax - p}
+            plan = compile_rank_halo_plan(
+                forest, self.sim.fields, rank_slots, fields=("pdf",),
+                levels=active,
+            )
+            bad = verify_padded_plan(plan, rank_slots)
+            assert not bad, bad  # no plan index may ever touch a padded slot
+            sched = schedule_ppermute_rounds(plan.messages)
+            plans[p] = plan
+            schedules[p] = sched
+            messages[p] = plan.messages
+            rounds_n[p] = len(sched)
+            pad_bytes[p] = (
+                sum(rnd.pad_cells() for rnd in sched) * lead * itemsize
+            )
+        fn = make_device_superstep(
+            mesh=self.mesh,
+            levels=levels,
+            plans=plans,
+            schedules=schedules,
+            steppers={l: self._fused_stepper(l) for l in levels},
+            donate=getattr(self.cfg, "donate_pdfs", None),
+        )
+        return _DevicePrograms(
+            levels=levels,
+            counts=counts,
+            nsub=nsub,
+            pattern=pattern,
+            fn=fn,
+            messages=messages,
+            rounds=rounds_n,
+            pad_bytes=pad_bytes,
+        )
+
+    # -- device residency ------------------------------------------------------
+    def _ensure_device(self, progs: _DevicePrograms) -> None:
+        """Upload the padded global stacks (once per storage version)."""
+        version = self.arenas.version
+        if self._dev_version != version or self._dev_levels != progs.levels:
+            assert not self._host_stale  # adopt() already enforces the flush
+            self._dev_pdfs = None
+            self._dev_masks = None
+        if self._dev_pdfs is not None and self._dev_masks is not None:
+            return
+        nranks = self.cfg.nranks
+        sharding = jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec("ranks")
+        )
+        lattice = self.sim.spec.lattice
+        with _TR.span("device:upload", cat="transfer", version=version):
+            if self._dev_pdfs is None:
+                stacks = []
+                for l in progs.levels:
+                    bufs = [self.arenas.buffer(r, l, "pdf") for r in range(nranks)]
+                    shape = next(b.shape[1:] for b in bufs if b is not None)
+                    dtype = next(b.dtype for b in bufs if b is not None)
+                    g = np.empty((nranks, progs.counts[l]) + shape, dtype)
+                    # pad slots hold the weight vector — the all-WALL fixed
+                    # point of the kernel (see the class docstring)
+                    g[:] = np.asarray(  # repro: host-ok(lattice weights are a host constant)
+                        lattice.w, dtype=dtype
+                    ).reshape((lattice.Q,) + (1,) * 3)
+                    for r, b in enumerate(bufs):
+                        if b is not None and b.shape[0]:
+                            g[r, : b.shape[0]] = b
+                    stacks.append(jax.device_put(g, sharding))
+                self._dev_pdfs = tuple(stacks)
+            if self._dev_masks is None:
+                stacks = []
+                for l in progs.levels:
+                    bufs = [self.arenas.buffer(r, l, "mask") for r in range(nranks)]
+                    shape = next(b.shape[1:] for b in bufs if b is not None)
+                    dtype = next(b.dtype for b in bufs if b is not None)
+                    g = np.full(
+                        (nranks, progs.counts[l]) + shape, CellType.WALL, dtype
+                    )
+                    for r, b in enumerate(bufs):
+                        if b is not None and b.shape[0]:
+                            g[r, : b.shape[0]] = b
+                    stacks.append(jax.device_put(g, sharding))
+                self._dev_masks = tuple(stacks)
+        self._dev_version = version
+        self._dev_levels = progs.levels
+
+    def device_held_bytes_per_rank(self) -> int:
+        """Per-device bytes of padded stepping state (equal on every rank by
+        construction — the Table-1 boundedness quantity for this fabric)."""
+        progs = self._programs()
+        self._ensure_device(progs)
+        n = self.cfg.nranks
+        return sum(int(a.nbytes) // n for a in self._dev_pdfs + self._dev_masks)
+
+    # -- stepping --------------------------------------------------------------
+    def advance(self, coarse_steps: int) -> None:
+        """Run whole coarse steps as one SPMD program per step: upload once
+        per storage version, then every substep's emit/permute/absorb/step
+        happens on-device; the host only attributes the known (compile-time)
+        ppermute traffic into the ``DeviceComm`` counters."""
+        progs = self._programs()
+        self._ensure_device(progs)
+        comm = self.sim.comm
+        s0 = comm.stats.summary()
+        with _TR.stage("fused", cat="stage", coarse_steps=coarse_steps) as st:
+            pdfs = self._dev_pdfs
+            for _ in range(coarse_steps):
+                with _TR.span("device_superstep", cat="substep",
+                              nsub=progs.nsub):
+                    pdfs = progs.fn(pdfs, self._dev_masks)
+                for s in range(progs.nsub):
+                    p = progs.pattern[s]
+                    if progs.messages[p]:
+                        # repro: collective-ok(accounting mirror of the in-program ppermute rounds — p2p bytes, not a collective)
+                        comm.ppermute(
+                            progs.messages[p],
+                            rounds=progs.rounds[p],
+                            pad_bytes=progs.pad_bytes[p],
+                        )
+            # repro: host-ok(timing fence: StageStats seconds must not hide queued device work)
+            jax.block_until_ready(pdfs)
+            self._dev_pdfs = pdfs
+        self._host_stale = True
+        stage = StageStats.delta(s0, comm.stats.summary(), st.seconds)
+        # same convention as the other fused engines: one logical ghost
+        # exchange per substep, even where the fabric saw no cross-rank bytes
         stage.exchange_rounds = coarse_steps * progs.nsub
         self.sim.data_stats["fused"].add(stage)

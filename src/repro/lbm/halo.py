@@ -934,3 +934,132 @@ def compile_rank_halo_plan(
         local=local,
         messages=tuple(messages),
     )
+
+
+# ---------------------------------------------------------------------------
+# Device-fabric lowering: ppermute rounds + equal-blocks-per-rank padding
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PpermuteRound:
+    """One ``jax.lax.ppermute`` call covering a set of rank-pair messages.
+
+    ``ppermute`` is a partial permutation: each device sends at most one
+    payload and receives at most one per call. A halo exchange generally has
+    several messages per rank (one per neighboring pair and field), so the
+    message set is decomposed into rounds where every source and every
+    destination appears at most once. ``perm`` is the ``(src, dst)`` list in
+    the exact form ``ppermute`` takes; ``messages`` is aligned with it, and
+    ``num_cells`` is the padded per-payload row count for the round (every
+    participant ships the same shape — the SPMD program is identical on all
+    ranks, shorter messages are zero-padded and the pad rows are dropped by
+    the receiver's scatter, which only reads ``message.num_cells`` rows).
+    """
+
+    perm: tuple[tuple[int, int], ...]
+    messages: tuple[CompiledRankMessage, ...]
+    num_cells: int
+
+    def pad_cells(self) -> int:
+        """Zero rows shipped beyond the logical payloads (wire overhead)."""
+        return sum(self.num_cells - m.num_cells for m in self.messages)
+
+
+def schedule_ppermute_rounds(
+    messages: tuple[CompiledRankMessage, ...],
+) -> tuple[PpermuteRound, ...]:
+    """Greedily decompose rank-pair messages into partial permutations.
+
+    Messages are scanned in the deterministic plan order (sorted by
+    ``(src_rank, dst_rank, field)`` — :func:`compile_rank_halo_plan` emits
+    them that way) and each is placed in the first round where its source is
+    not yet sending and its destination not yet receiving, so the schedule is
+    a pure function of the plan. For the face-neighbor traffic of an SFC
+    partition this yields O(max rank degree) rounds, independent of the rank
+    count — the per-process boundedness column of Table 1 carried over to the
+    collective schedule.
+    """
+    rounds: list[tuple[list[tuple[int, int]], list[CompiledRankMessage]]] = []
+    for m in messages:
+        for perm, ms in rounds:
+            if all(s != m.src_rank for s, _ in perm) and all(
+                d != m.dst_rank for _, d in perm
+            ):
+                perm.append((m.src_rank, m.dst_rank))
+                ms.append(m)
+                break
+        else:
+            rounds.append(([(m.src_rank, m.dst_rank)], [m]))
+    return tuple(
+        PpermuteRound(
+            perm=tuple(perm),
+            messages=tuple(ms),
+            num_cells=max(m.num_cells for m in ms),
+        )
+        for perm, ms in rounds
+    )
+
+
+def padded_block_counts(
+    rank_slots: dict[int, dict[int, dict[int, int]]], nranks: int
+) -> dict[int, int]:
+    """Per-level block-stack height shared by every rank (max over ranks).
+
+    The device fabric runs one SPMD program, so each level's block stack must
+    have the same shape on every rank: ranks owning fewer blocks pad with
+    masked slots (all-WALL mask, weight-vector PDFs — an exact fixed point of
+    the kernel, see ``DeviceShardedEngine``). Rank-local slot ids stay valid
+    in the padded ``(nranks, count, ...)`` layout unchanged, because arenas
+    assign slots densely from zero.
+    """
+    counts: dict[int, int] = {}
+    for r in range(nranks):
+        for lvl, slots in rank_slots.get(r, {}).items():
+            counts[lvl] = max(counts.get(lvl, 0), len(slots))
+    return counts
+
+
+def verify_padded_plan(
+    plan: CompiledRankHaloPlan,
+    rank_slots: dict[int, dict[int, dict[int, int]]],
+) -> list[str]:
+    """Prove the lowered plan never reads or writes a padded slot.
+
+    Every gather/scatter slot index must address a *real* block of the
+    owning rank (slot < that rank's block count on the level); the padded
+    slots above are only ever touched by the kernel's masked no-op step.
+    Returns human-readable violations (empty == safe), in the style of
+    ``repro.analysis.plan_verify``.
+    """
+    problems: list[str] = []
+
+    def nblocks(rank: int, level: int) -> int:
+        return len(rank_slots.get(rank, {}).get(level, {}))
+
+    for rank, local in plan.local.items():
+        for op in local.ops:
+            if op.dst_slot.size and int(op.dst_slot.max()) >= nblocks(rank, op.dst_level):
+                problems.append(
+                    f"local[{rank}] {op.field}: dst_slot {int(op.dst_slot.max())} "
+                    f"exceeds {nblocks(rank, op.dst_level)} blocks at level {op.dst_level}"
+                )
+            if op.src_slot.size and int(op.src_slot.max()) >= nblocks(rank, op.src_level):
+                problems.append(
+                    f"local[{rank}] {op.field}: src_slot {int(op.src_slot.max())} "
+                    f"exceeds {nblocks(rank, op.src_level)} blocks at level {op.src_level}"
+                )
+    for m in plan.messages:
+        for src_level, _kind, src_slot, _src_cell in m.gather:
+            if src_slot.size and int(src_slot.max()) >= nblocks(m.src_rank, src_level):
+                problems.append(
+                    f"message {m.key}: gather slot {int(src_slot.max())} exceeds "
+                    f"{nblocks(m.src_rank, src_level)} blocks at level {src_level}"
+                )
+        for dst_level, dst_slot, _dst_cell, _n in m.scatter:
+            if dst_slot.size and int(dst_slot.max()) >= nblocks(m.dst_rank, dst_level):
+                problems.append(
+                    f"message {m.key}: scatter slot {int(dst_slot.max())} exceeds "
+                    f"{nblocks(m.dst_rank, dst_level)} blocks at level {dst_level}"
+                )
+    return problems

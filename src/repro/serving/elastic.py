@@ -40,7 +40,6 @@ from ..core.checkpoint import (
     save_checkpoint,
     snapshot_payloads,
 )
-from ..core.comm import Comm
 from ..telemetry import get_tracer
 
 _TR = get_tracer()
@@ -113,7 +112,8 @@ def resize_ranks(
                 sim.geom, entries, payloads, sim.registry, new_nranks
             )
         sim.cfg = dataclasses.replace(sim.cfg, nranks=new_nranks)
-        sim.comm = Comm(new_nranks)
+        # preserve the fabric type (device_sharded runs on a DeviceComm)
+        sim.comm = type(sim.comm)(new_nranks)
         sim.forest = forest
         # fresh engine: per-rank storage is sized by cfg.nranks at
         # construction, so rebuilding it is the rebind (mask travels through

@@ -1,0 +1,24 @@
+"""Mini device-fabric module for the ppermute checker fixture.
+
+ppermute is sanctioned p2p, but only with a reason on record: an
+unannotated call outside the fabric provider is a finding."""
+
+import jax
+
+
+def leak_halo(perm, payload):
+    return jax.lax.ppermute(payload, "ranks", perm)  # TP-PPERMUTE: unannotated
+
+
+def leak_permute(perm, payload):
+    return jax.lax.collective_permute(payload, perm)  # TP-PERMUTE: alias name
+
+
+def route_halo(perm, payload):
+    # repro: collective-ok(fixture: partial-permutation halo routing)
+    return jax.lax.ppermute(payload, "ranks", perm)  # NEG-ANNOTATED
+
+
+def ppermute(payload, pairs):
+    """Fabric provider: the def's own name exempts its body."""
+    return jax.lax.collective_permute(payload, pairs)  # NEG-PROVIDER

@@ -119,6 +119,26 @@ def test_collective_checker_uses_import_reachability():
     assert len(findings) == 2
 
 
+def test_collective_checker_flags_unannotated_ppermute():
+    """ppermute/collective_permute are in the default collective set: the
+    sanctioned p2p fabric must carry a reason at every call site. Unannotated
+    calls are findings; the annotated route and the fabric provider def (its
+    own name is in the set) stay clean."""
+    root = FIXTURES / "ppermute_tree"
+    cfg = LintConfig(
+        repo_root=root,
+        raw={"collective": {"stepping_modules": ["fabricpkg.stepping"],
+                            "exclude": []}},
+    )
+    findings = check_collective(cfg, ModuleCache(root))
+    # TP-PPERMUTE 10, TP-PERMUTE 14; NEG-ANNOTATED (19) and NEG-PROVIDER
+    # (24, enclosing def named 'ppermute') stay clean
+    assert _lines(findings, "src/fabricpkg/stepping.py") == [10, 14]
+    assert len(findings) == 2
+    assert "ppermute" in findings[0].message
+    assert "collective_permute" in findings[1].message
+
+
 def test_annotation_checker_rejects_empty_reasons():
     cfg = LintConfig(
         repo_root=FIXTURES,
